@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of ``fn(*args)`` in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """One CSV row: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def random_affinity(n: int, d: int, seed: int = 0) -> np.ndarray:
+    """Symmetric (D, n, n) affinity tensor with block structure.
+
+    The paper's tasks are all classifiers on the SAME dataset, so baseline
+    affinity is high (early layers learn shared low-level features), decays
+    with depth, and consecutive task pairs are extra-similar — mirroring the
+    synthetic multitask dataset's factor structure.
+    """
+    rng = np.random.default_rng(seed)
+    aff = np.zeros((d, n, n))
+    for k in range(d):
+        depth_decay = 1.0 - 0.25 * k / max(d - 1, 1)   # deeper -> less affine
+        base = rng.uniform(0.55, 0.8, size=(n, n)) * depth_decay
+        for i in range(0, n - 1, 2):
+            base[i, i + 1] = base[i + 1, i] = rng.uniform(0.85, 0.98) * depth_decay
+        aff[k] = (base + base.T) / 2
+        np.fill_diagonal(aff[k], 1.0)
+    return aff

@@ -1,0 +1,63 @@
+"""Figure 8 — variety score vs execution cost across model-size budgets.
+
+For each synthetic "dataset" (different affinity structures standing in for
+the paper's nine datasets), we compare the min-budget, max-budget and
+tradeoff-budget task graphs: low budget favours execution cost, high budget
+favours variety, and the tradeoff budget balances both — the paper's trend.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, random_affinity, time_call
+from repro.core import BlockCost, MSP430
+from repro.core.tradeoff import select_task_graph
+
+DATASETS = {
+    # name -> (n_tasks, affinity seed, weight scale)
+    "mnist": (5, 1, 4e5),
+    "fmnist": (5, 2, 4e5),
+    "cifar10": (6, 3, 9e5),
+    "svhn": (5, 4, 6e5),
+    "gtsrb": (5, 5, 3e5),
+    "gsc": (6, 6, 5e5),
+    "esc": (5, 7, 5e5),
+    "us8k": (5, 8, 7e5),
+    "hhar": (6, 9, 2e5),
+}
+
+
+def run(num_branch_points: int = 3) -> None:
+    for name, (n, seed, wscale) in DATASETS.items():
+        aff = random_affinity(n, num_branch_points, seed=seed)
+        costs = [
+            BlockCost(weight_bytes=wscale / 4, flops=10 * wscale / 4)
+            for _ in range(num_branch_points + 1)
+        ]
+
+        def select():
+            return select_task_graph(n, num_branch_points, aff, costs, MSP430)
+
+        us = time_call(select, iters=1, warmup=0)
+        res = select()
+        cands = res.candidates
+        vmin = min(c.variety for c in cands)
+        cmin = min(c.exec_cost for c in cands)
+        # min budget pick = lowest-size feasible graph; max budget = best variety
+        smallest = min(cands, key=lambda c: c.storage_bytes)
+        best_variety = min(cands, key=lambda c: (c.variety, c.exec_cost))
+        sel = res.selected
+        emit(
+            f"fig8/{name}", us,
+            (
+                f"min_budget_variety={smallest.variety:.3f};"
+                f"min_budget_cost={smallest.exec_cost:.4f};"
+                f"max_budget_variety={best_variety.variety:.3f};"
+                f"max_budget_cost={best_variety.exec_cost:.4f};"
+                f"tradeoff_variety={sel.variety:.3f};tradeoff_cost={sel.exec_cost:.4f}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

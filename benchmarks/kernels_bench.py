@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode) vs jnp oracle.
+
+Interpret-mode wall-time is NOT TPU performance — these rows exist to (a)
+exercise the kernels at benchmark shapes and (b) report the oracle-relative
+max error, plus the analytic VMEM working set per grid step that the
+BlockSpecs claim on real hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # Flash attention @ (B*H=8, S=512, d=64), blocks 128x128
+    q = jax.random.normal(key, (8, 512, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (8, 512, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (8, 512, 64), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention
+
+    us = time_call(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, q_blk=128, kv_blk=128)), warmup=1, iters=2)
+    err = float(jnp.abs(flash_attention(q, k, v) - R.flash_attention_ref(q, k, v)).max())
+    vmem_kb = (128 * 64 + 128 * 64 * 2 + 128 * 128 + 128 * 64) * 4 / 1024
+    emit("kernels/flash_attention", us, f"max_err={err:.2e};vmem_per_step_kb={vmem_kb:.0f}")
+
+    # Pearson affinity @ K=256, F=2048
+    x = jax.random.normal(key, (256, 2048), jnp.float32)
+    us = time_call(lambda: jax.block_until_ready(
+        ops.pairwise_pearson_dissimilarity(x)), warmup=1, iters=2)
+    z = x - x.mean(-1, keepdims=True)
+    z = z / jnp.linalg.norm(z, axis=-1, keepdims=True)
+    err = float(jnp.abs(
+        ops.pairwise_pearson_dissimilarity(x) - R.pearson_dissimilarity_ref(z)
+    ).max())
+    vmem_kb = (128 * 512 * 2 + 128 * 128 * 2) * 4 / 1024
+    emit("kernels/pearson_affinity", us, f"max_err={err:.2e};vmem_per_step_kb={vmem_kb:.0f}")
+
+    # SSD scan @ (B=2, S=512, H=4, P=32, N=32), chunk 64
+    ks = jax.random.split(key, 5)
+    xx = jax.random.normal(ks[0], (2, 512, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 512, 4)))
+    a = -jnp.exp(jax.random.normal(ks[2], (4,)))
+    bb = jax.random.normal(ks[3], (2, 512, 32))
+    cc = jax.random.normal(ks[4], (2, 512, 32))
+    us = time_call(lambda: jax.block_until_ready(
+        ops.ssd_scan(xx, dt, a, bb, cc, chunk=64)[0]), warmup=1, iters=2)
+    y, _ = ops.ssd_scan(xx, dt, a, bb, cc, chunk=64)
+    yr, _ = R.ssd_scan_ref(xx, dt, a, bb, cc, chunk=64)
+    err = float(jnp.abs(y - yr).max())
+    vmem_kb = (64 * 4 * 32 + 64 * 32 * 2 + 4 * 32 * 32 + 64 * 64 * 4) * 4 / 1024
+    emit("kernels/ssd_scan", us, f"max_err={err:.2e};vmem_per_step_kb={vmem_kb:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""§Roofline source: aggregate reports/dryrun/*.json into CSV rows.
+
+One row per (arch x shape x mesh): the three roofline terms (seconds),
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and per-device
+memory footprint from memory_analysis.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+REPORT_DIR = os.environ.get("DRYRUN_DIR", "reports/dryrun")
+
+
+def rows():
+    for path in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        with open(path) as f:
+            yield json.load(f)
+
+
+def run() -> None:
+    count_ok = count_skip = count_err = 0
+    for r in rows():
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            count_skip += 1
+            emit(name, 0.0, f"skipped:{r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            count_err += 1
+            emit(name, 0.0, f"ERROR:{r.get('error', '?')[:80]}")
+            continue
+        count_ok += 1
+        emit(
+            name,
+            r.get("compile_s", 0.0) * 1e6,
+            (
+                f"t_compute={r['t_compute']:.4g};t_memory={r['t_memory']:.4g};"
+                f"t_collective={r['t_collective']:.4g};dominant={r['dominant']};"
+                f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+                f"policy={r.get('policy')};params_B={r.get('n_params', 0)/1e9:.1f}"
+            ),
+        )
+    emit("roofline/summary", 0.0, f"ok={count_ok};skipped={count_skip};errors={count_err}")
+
+
+if __name__ == "__main__":
+    run()

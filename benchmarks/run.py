@@ -1,0 +1,47 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table3/*    — GA ordering vs exact optimum (paper Table 3)
+  fig7/*      — branch-point sensitivity (paper Figure 7)
+  fig8/*      — variety-vs-cost tradeoff per dataset (paper Figure 8)
+  fig9_10/*   — time/energy vs Vanilla/NWV/NWS/YONO (paper Figures 9-11)
+  fig15/*     — deployment variants Antler/-PC/-CC vs Vanilla (Figure 15)
+  table4_5/*  — memory consumption (paper Tables 4-5)
+  fig12_16/*  — accuracy parity Antler vs Vanilla (paper Figures 12/16)
+  kernels/*   — Pallas kernel checks at benchmark shapes
+  ablation/*  — beyond-paper ablations (GA crossover, ordering value, solver work)
+  roofline/*  — per (arch x shape x mesh) roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        ablations, fig7_branch_points, fig8_tradeoff, fig9_10_baselines,
+        fig12_accuracy, fig15_deployment, kernels_bench, roofline_table,
+        table3_ordering, table4_memory,
+    )
+
+    print("name,us_per_call,derived")
+    sections = [
+        table3_ordering, fig7_branch_points, fig8_tradeoff,
+        fig9_10_baselines, fig15_deployment, table4_memory, fig12_accuracy,
+        kernels_bench, ablations, roofline_table,
+    ]
+    failed = 0
+    for mod in sections:
+        try:
+            mod.run()
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},0,ERROR", file=sys.stdout)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

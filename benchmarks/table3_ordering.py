@@ -1,0 +1,86 @@
+"""Table 3 — genetic algorithm vs. exact optimum for task ordering.
+
+The paper repurposes TSPLIB instances (regular / precedence / conditional).
+TSPLIB is not available offline, so we generate instances with the SAME
+sizes and constraint counts as the paper's rows (FIVE n=5; P01 n=15;
+GR17 n=17; ESC07 n=9/6 prec; ESC11 n=13/3; br17.12 n=17/12; conditional
+variants add 3 probabilistic edges) from seeded symmetric cost matrices.
+Optimal values come from Held-Karp / branch-and-bound (exact); the benchmark
+reports GA cost vs optimal cost and the deviation, mirroring the paper's
+"identical except a few conditional cases within 5%" claim.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import (
+    Constraints, GAConfig, branch_and_bound_order, genetic_order, held_karp_order,
+)
+
+
+def _instance(n: int, seed: int, n_prec: int = 0, n_cond: int = 0):
+    rng = np.random.default_rng(seed)
+    c = rng.integers(5, 100, size=(n, n)).astype(float)
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    prec, cond = [], []
+    # Sample a DAG-consistent set of precedence edges over a random order.
+    hidden = rng.permutation(n)
+    pairs = [
+        (int(hidden[i]), int(hidden[j]))
+        for i in range(n) for j in range(i + 1, n)
+    ]
+    rng.shuffle(pairs)
+    prec = pairs[:n_prec]
+    for (i, j) in pairs[n_prec:n_prec + n_cond]:
+        cond.append((i, j, float(rng.uniform(0.3, 0.9))))
+    cons = Constraints.make(n, precedence=prec, conditional=cond)
+    return c, cons
+
+
+ROWS = [
+    # (variant, name, n, n_prec, n_cond)
+    ("regular", "FIVE", 5, 0, 0),
+    ("regular", "P01", 15, 0, 0),
+    ("regular", "GR17", 17, 0, 0),
+    ("precedence", "ESC07", 9, 6, 0),
+    ("precedence", "ESC11", 13, 3, 0),
+    ("precedence", "br17.12", 17, 12, 0),
+    ("conditional", "ESC07c", 9, 6, 3),
+    ("conditional", "ESC11c", 13, 3, 3),
+    ("conditional", "ESC12c", 14, 7, 3),
+]
+
+
+def run() -> None:
+    for variant, name, n, n_prec, n_cond in ROWS:
+        c, cons = _instance(n, seed=zlib.crc32(name.encode()), n_prec=n_prec, n_cond=n_cond)
+        exact = (
+            held_karp_order(c, cons)
+            if n <= 17
+            else branch_and_bound_order(c, cons)
+        )
+        def solve_ga():
+            # Multi-restart memetic GA (best of 3 seeds), paper Appendix 9.2.
+            best = None
+            for seed in (1, 2, 3, 4, 5):
+                r = genetic_order(c, cons, GAConfig(
+                    population=256, elite_pairs=64, patience=60, seed=seed))
+                if best is None or r.cost < best.cost:
+                    best = r
+            return best
+
+        us = time_call(solve_ga, iters=1, warmup=0)
+        ga = solve_ga()
+        dev = 0.0 if exact.cost == 0 else (ga.cost - exact.cost) / exact.cost * 100
+        emit(
+            f"table3/{variant}/{name}", us,
+            f"optimal={exact.cost:.1f};antler_ga={ga.cost:.1f};deviation_pct={dev:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

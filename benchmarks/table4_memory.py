@@ -1,0 +1,53 @@
+"""Tables 4 & 5 — memory consumption of all systems.
+
+Reports total storage (KB) of Vanilla / Antler / NWS / NWV / YONO over the
+paper-scale CNN task sets.  Expected ordering (paper Table 4):
+Vanilla > Antler > NWS > NWV > YONO, with Antler ~half of Vanilla in the
+real-deployment rows (Table 5).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, random_affinity, time_call
+from repro.core import (
+    MSP430, antler_report, nws_baseline, nwv_baseline, vanilla_baseline,
+    yono_baseline,
+)
+from repro.core.tradeoff import select_task_graph
+from repro.models.cnn import build_lenet5_blocks
+
+ROWS = {
+    "dataset_driven_10task": (10, 3),
+    "audio_deployment_5task": (5, 11),
+    "image_deployment_4task": (4, 12),
+}
+
+
+def run() -> None:
+    _i, _a, costs, _f = build_lenet5_blocks()
+    for name, (n, seed) in ROWS.items():
+        aff = random_affinity(n, 3, seed=seed)
+
+        def pick():
+            return select_task_graph(
+                n, 3, aff, costs, MSP430, beam=600 if n > 6 else None
+            ).selected
+
+        us = time_call(pick, iters=1, warmup=0)
+        sel = pick()
+        ant = antler_report(sel.graph, costs, MSP430, list(sel.order))
+        kb = lambda b: b / 1024.0
+        emit(
+            f"table4_5/{name}", us,
+            (
+                f"vanilla_kb={kb(vanilla_baseline(n, costs, MSP430).memory_bytes):.0f};"
+                f"antler_kb={kb(ant.memory_bytes):.0f};"
+                f"nws_kb={kb(nws_baseline(n, costs, MSP430).memory_bytes):.0f};"
+                f"nwv_kb={kb(nwv_baseline(n, costs, MSP430).memory_bytes):.0f};"
+                f"yono_kb={kb(yono_baseline(n, costs, MSP430).memory_bytes):.0f};"
+                f"antler_vs_vanilla={ant.memory_bytes / vanilla_baseline(n, costs, MSP430).memory_bytes:.2f}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""End-to-end driver: train a ~100M-parameter multitask transformer for a
+few hundred steps (deliverable b).
+
+The backbone is a reduced granite-family decoder (~100M params); Antler's
+task graph attaches 4 classification branches over its blocks, selected by
+the affinity/tradeoff pipeline; the joint branched-multitask loss retrains
+the graph (paper §2.2 step "the task graph is retrained") while the LM head
+keeps next-token loss on the shared trunk.
+
+Run:  PYTHONPATH=src python examples/train_multitask.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MSP430, TPU_V5E, GraphCostModel, optimal_order
+from repro.core.task_graph import TaskGraph
+from repro.data import lm_batches
+from repro.models import make_config
+from repro.models.multitask import (
+    build_transformer_program, multitask_loss, program_trainable_params,
+    transformer_block_costs, _split_layers,
+)
+from repro.sharding.policy import TP_POLICY
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M-param granite-family backbone (8 layers, d=768, swiglu).
+    cfg = make_config(
+        name="granite-100m", family="dense", num_layers=8, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32768,
+        dtype="float32", param_dtype="float32", remat=False,
+        attn_chunk=64, loss_chunk=64,
+    )
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]],
+        [[0, 1], [2, 3]],
+        [[0, 1], [2], [3]],
+        [[0], [1], [2], [3]],
+    ])
+    n_classes = [4, 4, 8, 2]
+    prog = build_transformer_program(
+        jax.random.PRNGKey(0), graph, cfg, n_classes, seq_len=args.seq
+    )
+    flat = program_trainable_params(prog)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(flat))
+    print(f"multitask transformer: {n_params/1e6:.1f}M params, "
+          f"{len(prog.node_params)} task-graph nodes")
+
+    order = optimal_order(
+        GraphCostModel(prog.graph, prog.block_costs, TPU_V5E).cost_matrix()
+    )
+    print(f"optimal serving order for the branches: {order.order}")
+
+    opt = adamw_init(flat)
+    opt_cfg = AdamWConfig(lr=1e-4, warmup_steps=20, total_steps=args.steps)
+
+    def loss_fn(f, x, labels):
+        return multitask_loss(prog, f, x, labels)
+
+    @jax.jit
+    def train_step(f, opt, x, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(f, x, labels)
+        f, opt, m = adamw_update(opt_cfg, grads, opt, f)
+        return f, opt, loss, m["grad_norm"]
+
+    it = lm_batches(cfg.vocab_size, batch=args.batch, seq_len=args.seq, seed=0)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for step in range(args.steps):
+        tokens = jnp.asarray(next(it))
+        # synthetic branch labels each task can actually learn: task t
+        # classifies the token at position -(t+1) — late positions the
+        # last-token head state attends to directly.  Related label spaces
+        # give the branches genuine affinity.
+        arr = np.asarray(tokens)
+        labels = jnp.asarray(np.stack([
+            arr[:, -(t + 1)] % c for t, c in enumerate(n_classes)
+        ]).astype(np.int32))
+        flat, opt, loss, gnorm = train_step(flat, opt, tokens, labels)
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} ({time.time()-t0:.0f}s)")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Render the §Roofline markdown table from reports/dryrun/*.json
+(and the baseline snapshot for before/after comparison)."""
+import glob
+import json
+import os
+import sys
+
+
+def rows(d):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt(r):
+    if r is None:
+        return "—"
+    if r["status"] == "skipped":
+        return "skip"
+    return f"{r['t_compute']:.3f} / {r['t_memory']:.2f} / {r['t_collective']:.2f}"
+
+
+def main():
+    cur = rows("reports/dryrun")
+    print("| arch | shape | mesh | policy | t_compute (s) | t_memory (s) | "
+          "t_collective (s) | dominant | MODEL/HLO FLOPs | params (B) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(cur.items()):
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | {m} | — | — | — | — | skipped ({r['reason'][:40]}…) | — | — |")
+            continue
+        print(
+            f"| {a} | {s} | {m} | {r['policy']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['n_params']/1e9:.2f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

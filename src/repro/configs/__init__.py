@@ -1,0 +1,56 @@
+"""Architecture registry: the 10 assigned architectures (each citing its
+source) + the paper's own CNN-scale configurations.
+
+``get_config(arch_id)`` returns the full production config;
+``get_smoke_config(arch_id)`` returns the reduced same-family variant
+(<= 2 layers, d_model <= 512, <= 4 experts) used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+# canonical id -> module name
+_ARCHS = {
+    "granite-34b": "granite_34b",
+    "whisper-medium": "whisper_medium",
+    "granite-20b": "granite_20b",
+    "chameleon-34b": "chameleon_34b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "mamba2-780m": "mamba2_780m",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+
+def _norm(arch_id: str) -> str:
+    mod = arch_id.replace("-", "_").replace(".", "_")
+    return mod
+
+
+def list_archs() -> List[str]:
+    return list(_ARCHS.keys())
+
+
+def _module(arch_id: str):
+    name = _norm(arch_id)
+    if name not in _ARCHS.values():
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in list_archs()}

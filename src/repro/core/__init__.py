@@ -1,0 +1,58 @@
+"""Antler core: task affinity, task graphs, ordering, and the block-cached
+multitask executor (the paper's primary contribution, in JAX)."""
+
+from repro.core.affinity import (
+    affinity_matrix,
+    compute_affinity,
+    pairwise_pearson_dissimilarity,
+    profile_task,
+    spearman,
+)
+from repro.core.baselines import (
+    BaselineReport,
+    antler_report,
+    nws_baseline,
+    nwv_baseline,
+    vanilla_baseline,
+    yono_baseline,
+)
+from repro.core.constraints import Constraints, no_constraints
+from repro.core.cost_model import GraphCostModel, uniform_block_costs
+from repro.core.executor import (
+    MultitaskProgram,
+    TaskGraphExecutor,
+    VanillaExecutor,
+    run_in_order,
+)
+from repro.core.genetic import GAConfig, genetic_order
+from repro.core.profiler import profile_blocks, profile_program_blocks
+from repro.core.ordering import (
+    ILPFormulation,
+    OrderingResult,
+    branch_and_bound_order,
+    brute_force_order,
+    fitness,
+    held_karp_order,
+    optimal_order,
+)
+from repro.core.task_graph import (
+    TaskGraph,
+    enumerate_task_graphs,
+    variety_score,
+)
+from repro.core.tradeoff import (
+    GraphCandidate,
+    TradeoffResult,
+    select_task_graph,
+    tradeoff_curve,
+)
+from repro.core.types import (
+    MSP430,
+    STM32H747,
+    TPU_V5E,
+    BlockCost,
+    ExecutionStats,
+    HardwareModel,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

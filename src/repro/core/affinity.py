@@ -1,0 +1,157 @@
+"""Task-affinity computation (paper §3.1).
+
+Two-step process, faithful to the paper:
+
+Step 1 (per task): profile the task's network at ``D`` branch points over
+``K`` samples.  At each branch point the pairwise *dissimilarity* between the
+representations of every pair of samples is the **inverse Pearson
+correlation** ``1 - r``; this yields a ``D x K x K`` profile tensor per task.
+
+Step 2 (per task pair): at each branch point, the **Spearman rank
+correlation** between the two tasks' flattened ``K x K`` profiles gives the
+affinity ``S[d, i, j]`` -> a ``D x n x n`` affinity tensor.
+
+The pairwise-Pearson step is the compute hot spot (O(D K^2 F)); the Pallas
+kernel in :mod:`repro.kernels.pearson_affinity` implements the same
+centered-Gram formulation for TPU, and :func:`pairwise_pearson_dissimilarity`
+is its jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _standardize_rows(x: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Center each row and scale it to unit L2 norm (Pearson normalisation)."""
+    x = x - jnp.mean(x, axis=-1, keepdims=True)
+    norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(norm, eps)
+
+
+def pairwise_pearson_dissimilarity(feats: jnp.ndarray) -> jnp.ndarray:
+    """``1 - Pearson(r_i, r_j)`` for all sample pairs.
+
+    Args:
+      feats: ``(K, F)`` representations of ``K`` samples at one branch point.
+
+    Returns:
+      ``(K, K)`` dissimilarity matrix in ``[0, 2]``.
+    """
+    z = _standardize_rows(feats.astype(jnp.float32))
+    corr = z @ z.T  # centered & normalised rows -> Gram == Pearson matrix
+    return 1.0 - corr
+
+
+def _rankdata(x: jnp.ndarray) -> jnp.ndarray:
+    """Average-tie ranks of a 1-D array (Spearman prerequisite).
+
+    Matches ``scipy.stats.rankdata(method='average')`` for the no-ties case
+    and handles ties by averaging via a double argsort on (value, index).
+    """
+    n = x.shape[0]
+    order = jnp.argsort(x, stable=True)
+    ranks = jnp.empty(n, dtype=jnp.float32).at[order].set(
+        jnp.arange(1, n + 1, dtype=jnp.float32)
+    )
+    # Average ranks over ties: for each element, mean rank of equal values.
+    sorted_x = x[order]
+    # Boundaries of tie groups in sorted order.
+    new_group = jnp.concatenate(
+        [jnp.array([True]), sorted_x[1:] != sorted_x[:-1]]
+    )
+    group_id = jnp.cumsum(new_group) - 1
+    group_sum = jax.ops.segment_sum(
+        jnp.arange(1, n + 1, dtype=jnp.float32), group_id, num_segments=n
+    )
+    group_cnt = jax.ops.segment_sum(
+        jnp.ones(n, dtype=jnp.float32), group_id, num_segments=n
+    )
+    mean_rank_per_group = group_sum / jnp.maximum(group_cnt, 1.0)
+    avg_sorted = mean_rank_per_group[group_id]
+    return ranks.at[order].set(avg_sorted)
+
+
+def spearman(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Spearman rank correlation between two flattened profile vectors."""
+    ra, rb = _rankdata(a.reshape(-1)), _rankdata(b.reshape(-1))
+    ra = ra - jnp.mean(ra)
+    rb = rb - jnp.mean(rb)
+    denom = jnp.linalg.norm(ra) * jnp.linalg.norm(rb)
+    return jnp.where(denom > 0, jnp.dot(ra, rb) / jnp.maximum(denom, 1e-12), 0.0)
+
+
+def profile_task(
+    reps_at_branch_points: Sequence[jnp.ndarray],
+) -> jnp.ndarray:
+    """Step 1 for one task: stack per-branch-point ``K x K`` dissimilarities.
+
+    Args:
+      reps_at_branch_points: length-``D`` list of ``(K, F_d)`` representation
+        matrices captured at each branch point (``F_d`` may differ per depth).
+
+    Returns:
+      ``(D, K, K)`` profile tensor.
+    """
+    return jnp.stack(
+        [pairwise_pearson_dissimilarity(r.reshape(r.shape[0], -1))
+         for r in reps_at_branch_points]
+    )
+
+
+def affinity_matrix(profiles: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Step 2: ``(D, n, n)`` Spearman affinity between all task pairs.
+
+    Args:
+      profiles: length-``n`` list of ``(D, K, K)`` profile tensors.
+
+    Returns:
+      ``S`` with ``S[d, i, j]`` = Spearman correlation of tasks i, j's
+      branch-point-``d`` profiles.  Symmetric with unit diagonal.
+    """
+    profs = jnp.stack(list(profiles))  # (n, D, K, K)
+    n, d = profs.shape[0], profs.shape[1]
+    flat = profs.reshape(n, d, -1)
+
+    def pairwise(di: int) -> jnp.ndarray:
+        def one(i, j):
+            return spearman(flat[i, di], flat[j, di])
+
+        rows = []
+        for i in range(n):
+            cols = [one(i, j) for j in range(n)]
+            rows.append(jnp.stack(cols))
+        return jnp.stack(rows)
+
+    return jnp.stack([pairwise(di) for di in range(d)])
+
+
+def compute_affinity(
+    apply_with_taps: Callable[[jax.Array, int], List[jnp.ndarray]],
+    num_tasks: int,
+    samples: jnp.ndarray,
+) -> jnp.ndarray:
+    """End-to-end affinity: profile every task on ``samples`` then correlate.
+
+    Args:
+      apply_with_taps: ``f(samples, task_idx) -> [reps at D branch points]``;
+        each element is ``(K, ...)``.
+      num_tasks: number of tasks ``n``.
+      samples: ``(K, ...)`` probe batch drawn from the shared domain ``X``.
+
+    Returns:
+      ``(D, n, n)`` affinity tensor (Spearman, in ``[-1, 1]``).
+    """
+    profiles = [
+        profile_task(apply_with_taps(samples, t)) for t in range(num_tasks)
+    ]
+    return affinity_matrix(profiles)
+
+
+def affinity_as_numpy(s: jnp.ndarray) -> np.ndarray:
+    return np.asarray(jax.device_get(s))

@@ -1,0 +1,135 @@
+"""Switching-cost model (paper §4.1) and task-graph cost estimation.
+
+The cost matrix ``C`` has ``c[i, j]`` = additional cost of loading and
+executing task ``j`` given that task ``i`` just ran: the blocks on ``j``'s
+path that are *not* shared with ``i`` must be loaded into the fast tier and
+executed; shared-prefix blocks are skipped entirely because the executor
+caches both their weights (already resident) and their output activations
+(paper §2.3).  Because all paths run the same common architecture, block
+cost depends only on depth, and the matrix is symmetric — exactly the
+paper's observation.
+
+Costs can be measured in seconds or joules through a
+:class:`~repro.core.types.HardwareModel`; the unit-cost mode (``hw=None``)
+reproduces the paper's Figure-4 example where every block costs 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.task_graph import TaskGraph
+from repro.core.types import BlockCost, ExecutionStats, HardwareModel
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCostModel:
+    """Cost model for a task graph given per-depth block costs.
+
+    Attributes:
+      graph: the task graph.
+      block_costs: length ``D + 1`` per-depth :class:`BlockCost` of the common
+        architecture (the paper profiles these empirically on-device; we
+        derive them from the model definition's FLOP/byte counters).
+      hw: platform; ``None`` means abstract unit costs (1 load + 1 exec per
+        block, as in the paper's Figure 4 walkthrough).
+      metric: ``"time"`` or ``"energy"`` (paper evaluates both).
+    """
+
+    graph: TaskGraph
+    block_costs: Sequence[BlockCost]
+    hw: Optional[HardwareModel] = None
+    metric: str = "time"
+
+    def block_cost(self, depth: int) -> float:
+        """Load + execute cost of the depth-``depth`` block."""
+        if self.hw is None:
+            return 2.0  # 1 unit load + 1 unit exec, Figure-4 convention
+        bc = self.block_costs[depth]
+        if self.metric == "energy":
+            return bc.energy_joules(self.hw)
+        return bc.total_seconds(self.hw)
+
+    def task_cost(self, task: int) -> float:
+        """Cold cost of running ``task`` with nothing cached."""
+        return sum(self.block_cost(d) for d, _ in self.graph.path(task))
+
+    def switching_cost(self, prev: int, nxt: int) -> float:
+        """``c[prev, nxt]``: cost of the non-shared suffix of ``nxt``."""
+        if prev == nxt:
+            return 0.0
+        shared = self.graph.shared_prefix_depth(prev, nxt)
+        return sum(
+            self.block_cost(d) for d in range(shared, self.graph.depth)
+        )
+
+    def cost_matrix(self) -> np.ndarray:
+        """The full symmetric ``n x n`` cost matrix (Eq. 3)."""
+        n = self.graph.num_tasks
+        c = np.zeros((n, n), dtype=np.float64)
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    c[i, j] = self.switching_cost(i, j)
+        return c
+
+    # ----------------------------------------------------------- aggregates
+    def order_cost(self, order: Sequence[int], cyclic: bool = False) -> float:
+        """Total cost of executing all tasks in ``order``.
+
+        First task pays its cold cost; every subsequent task pays the
+        switching cost from its predecessor.  With ``cyclic=True`` the
+        wrap-around switch is added (the ILP's Hamiltonian-cycle objective);
+        the paper's fitness (Eq. 7) is the path version.
+        """
+        total = self.task_cost(order[0])
+        for a, b in zip(order[:-1], order[1:]):
+            total += self.switching_cost(a, b)
+        if cyclic and len(order) > 1:
+            total += self.switching_cost(order[-1], order[0])
+        return total
+
+    def storage_bytes(self) -> float:
+        """Total weight bytes of the task graph (Table 4/5 'memory')."""
+        total = 0.0
+        for d, _g in self.graph.nodes():
+            total += self.block_costs[d].weight_bytes
+        return total
+
+    def vanilla_storage_bytes(self) -> float:
+        """Storage if every task kept its own full network (Vanilla)."""
+        per_task = sum(bc.weight_bytes for bc in self.block_costs)
+        return per_task * self.graph.num_tasks
+
+    def predicted_stats(self, order: Sequence[int]) -> ExecutionStats:
+        """Counter-level prediction the executor must match exactly."""
+        stats = ExecutionStats()
+        cached_depth = -1
+        prev: Optional[int] = None
+        for t in order:
+            shared = (
+                self.graph.shared_prefix_depth(prev, t) if prev is not None else 0
+            )
+            for d in range(self.graph.depth):
+                bc = self.block_costs[d]
+                if d < shared:
+                    stats.blocks_skipped += 1
+                    stats.weight_bytes_skipped += bc.weight_bytes
+                    stats.flops_skipped += bc.flops
+                else:
+                    stats.blocks_executed += 1
+                    stats.weight_bytes_loaded += bc.weight_bytes
+                    stats.flops_executed += bc.flops
+            stats.tasks_run += 1
+            prev = t
+        del cached_depth
+        return stats
+
+
+def uniform_block_costs(
+    depth: int, weight_bytes: float = 1.0, flops: float = 1.0
+) -> List[BlockCost]:
+    """Equal-cost blocks — the paper's Figure-4 illustration setting."""
+    return [BlockCost(weight_bytes=weight_bytes, flops=flops) for _ in range(depth)]

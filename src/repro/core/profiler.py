@@ -1,0 +1,87 @@
+"""Empirical block profiling (paper §5.3, step 1).
+
+The paper measures per-layer execution time ON DEVICE and feeds the
+measurements into task-graph generation.  This module does the same for any
+:class:`~repro.core.executor.MultitaskProgram`-style block family: it times
+each block's jitted apply on this host, counts its weight bytes, and emits
+:class:`~repro.core.types.BlockCost` entries whose ``flops`` are calibrated
+so that the analytic cost model's per-block execution time on the *profiled*
+hardware model matches the measurement.
+
+This closes the loop between the analytic tables used by the benchmarks and
+real execution: ``profile_blocks`` -> ``BlockCost`` -> ``GraphCostModel``
+-> ordering/selection, all from measurements.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.types import BlockCost, HardwareModel
+from repro.sharding.utils import tree_bytes
+
+
+def _time_jitted(fn: Callable, params: Any, x: Any,
+                 warmup: int = 2, iters: int = 5) -> float:
+    jf = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(jf(params, x))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jf(params, x))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def profile_blocks(
+    block_fns: Sequence[Callable],
+    block_params: Sequence[Any],
+    x0: Any,
+    hw: HardwareModel,
+    batch_divisor: int = 1,
+) -> List[BlockCost]:
+    """Measure each block end to end and calibrate BlockCost entries.
+
+    Args:
+      block_fns: per-depth apply functions (chained: block d feeds d+1).
+      block_params: parameters for one representative node per depth.
+      x0: input batch for depth 0.
+      hw: the hardware model the calibrated costs should reproduce the
+        measured seconds on (``hw.exec_seconds(flops) == measured``).
+      batch_divisor: divide measured time by this to get per-sample cost.
+
+    Returns:
+      per-depth :class:`BlockCost` with measured-calibrated ``flops`` and
+      exact ``weight_bytes``/``act_bytes``.
+    """
+    costs: List[BlockCost] = []
+    h = x0
+    for fn, params in zip(block_fns, block_params):
+        seconds = _time_jitted(fn, params, h) / batch_divisor
+        out = jax.jit(fn)(params, h)
+        costs.append(
+            BlockCost(
+                weight_bytes=float(tree_bytes(params)),
+                # Calibrated so hw.exec_seconds(flops) == measured seconds.
+                flops=float(seconds * hw.peak_flops),
+                act_bytes=float(tree_bytes(out)) / max(x0.shape[0], 1),
+            )
+        )
+        h = out
+    return costs
+
+
+def profile_program_blocks(program, x0, hw: HardwareModel) -> List[BlockCost]:
+    """Profile a MultitaskProgram's common architecture (one node per depth)."""
+    graph = program.graph
+    reps = []
+    for d in range(graph.depth):
+        node = graph.path(0)[d]
+        reps.append(program.node_params[node])
+    return profile_blocks(
+        program.block_fns, reps, x0, hw, batch_divisor=x0.shape[0]
+    )

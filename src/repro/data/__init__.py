@@ -1,0 +1,2 @@
+"""Synthetic data pipelines (LM token streams + multitask classification)."""
+from repro.data.synthetic import MultitaskDataset, lm_batches, train_test_split

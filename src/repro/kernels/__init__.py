@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated interpret=True on CPU) + jnp oracles."""
+from repro.kernels.ops import (
+    flash_attention_bhsd,
+    pairwise_pearson_dissimilarity,
+    ssd_scan,
+)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-swept in tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked, ssd_sequential_ref
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    """Dense softmax attention over flattened (batch*heads) slices."""
+    d = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    qp = jnp.arange(q.shape[1])[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones(s.shape[1:], dtype=bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def pearson_dissimilarity_ref(z: jax.Array) -> jax.Array:
+    """``1 - Z Z^T`` for standardised rows (fp32)."""
+    z32 = z.astype(jnp.float32)
+    return 1.0 - z32 @ z32.T
+
+
+def ssd_scan_ref(
+    x: jax.Array, dt: jax.Array, a: jax.Array,
+    b_in: jax.Array, c_in: jax.Array, chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-SSD oracle (itself validated against the sequential scan)."""
+    return ssd_chunked(x, dt, a, b_in, c_in, chunk)
+
+
+def ssd_sequential(x, dt, a, b_in, c_in):
+    return ssd_sequential_ref(x, dt, a, b_in, c_in)

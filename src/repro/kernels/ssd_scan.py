@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the Mamba2 chunked SSD scan (arXiv:2405.21060).
+
+One grid step processes one (batch, chunk) tile for ALL heads: the
+intra-chunk quadratic term (masked-decay attention over the chunk) and the
+inter-chunk state recurrence, with the running (H, P, N) state carried in
+VMEM scratch across the sequential chunk axis.  Grid ``(B, S/Q)`` with the
+chunk axis innermost; the state scratch is re-zeroed at chunk 0 of every
+batch row.
+
+Per-tile working set (fp32): Q*H*P (x) + Q*N (B,C) + H*P*N (state) + Q*Q*H
+(decay tile) — sized to sit comfortably in 128 MB-class VMEM for
+(Q=128, H<=96/16 per model shard, P=64, N=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,      # (1, Q, H, P)
+    dt_ref,     # (1, Q, H)
+    a_ref,      # (H,)
+    b_ref,      # (1, Q, N)
+    c_ref,      # (1, Q, N)
+    y_ref,      # (1, Q, H, P)
+    fin_ref,    # (1, H, P, N) final state output (written on last chunk)
+    state_scr,  # VMEM (H, P, N) running inter-chunk state
+    *,
+    q: int,
+    nc: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    a = a_ref[...].astype(jnp.float32)        # (H,)
+    bb = b_ref[0].astype(jnp.float32)         # (Q, N)
+    cc = c_ref[0].astype(jnp.float32)         # (Q, N)
+
+    da = dt * a[None, :]                      # (Q, H)
+    da_cum = jnp.cumsum(da, axis=0)           # inclusive
+
+    # Intra-chunk: y_i = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    cb = cc @ bb.T                            # (Q, Q)
+    decay = jnp.exp(da_cum[:, None, :] - da_cum[None, :, :])      # (Q, Q, H)
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    )
+    lmat = jnp.where(causal[:, :, None], decay, 0.0) * cb[:, :, None]  # (Q,Q,H)
+    dx = dt[:, :, None] * x                    # (Q, H, P)
+    y = jnp.einsum("ijh,jhp->ihp", lmat, dx)
+
+    # Inter-chunk: y_i += C_i . state_prev * exp(cum_i)
+    state = state_scr[...]                     # (H, P, N)
+    y += jnp.einsum("in,hpn,ih->ihp", cc, state, jnp.exp(da_cum))
+
+    # State update: state = state * exp(cum_Q) + sum_j B_j x dx_j exp(cum_Q - cum_j)
+    to_end = jnp.exp(da_cum[-1][None, :] - da_cum)  # (Q, H)
+    s_chunk = jnp.einsum("jn,jh,jhp->hpn", bb, to_end, dx)
+    state_scr[...] = state * jnp.exp(da_cum[-1])[:, None, None] + s_chunk
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        fin_ref[0] = state_scr[...].astype(fin_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)
+    a: jax.Array,      # (H,)
+    b_in: jax.Array,   # (B, S, N)
+    c_in: jax.Array,   # (B, S, N)
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // chunk
+    grid = (bsz, nc)
+    y, fin = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=chunk, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((h,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s_pad, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b_in, c_in)
+    return y[:, :s], fin

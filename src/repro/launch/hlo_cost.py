@@ -1,0 +1,328 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+which undercounts every ``lax.scan``-stacked layer loop by its trip count —
+useless for roofline work on scan-based models.  This module re-derives
+FLOPs / HBM bytes / collective bytes by walking the post-optimization HLO
+text as a call graph:
+
+* per computation: dot/convolution FLOPs (operand shapes resolved through a
+  per-computation symbol table), per-op traffic (result + operand bytes,
+  skipping free ops), and collective result bytes by kind;
+* ``fusion`` ops contribute their callee's FLOPs but only the fusion's own
+  operand/result bytes (the interior is fused — no HBM traffic);
+* ``while`` ops multiply body+condition cost by the trip count parsed from
+  ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the constant
+  bound in the condition computation, else 1);
+* async collective pairs are counted at the ``-done`` op only.
+
+Bytes are a traffic *model* (each op's operands + results), deliberately
+close to what HloCostAnalysis charges; collective bytes use the result-shape
+size, the standard per-chip traffic proxy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in COLLECTIVE_KINDS:
+            self.coll[k] += mult * other.coll[k]
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_text: str          # type annotation part of the RHS
+    opcode: str
+    line: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[_Op]] = {}
+        self.symtab: Dict[str, Dict[str, str]] = {}  # comp -> op name -> result text
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._entry_name(hlo_text)
+
+    # -------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and line.strip().endswith("{"):
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                self.symtab[cur] = {}
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            # opcode = first identifier followed by '(' after the type annot.
+            om = re.search(r"([a-z][\w\-]*)\(", rhs)
+            opcode = om.group(1) if om else ""
+            # result text = everything before the opcode occurrence
+            result_text = rhs[: om.start()] if om else rhs
+            self.computations[cur].append(_Op(name, result_text, opcode, line))
+            self.symtab[cur][name] = result_text
+
+    def _entry_name(self, text: str) -> str:
+        for line in text.splitlines():
+            s = line.strip()
+            if s.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(s)
+                if m:
+                    return m.group(1)
+        # fallback: last computation
+        return list(self.computations)[-1]
+
+    # ------------------------------------------------------------- costing
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total  # break cycles defensively
+        for op in self.computations.get(comp, []):
+            self._cost_op(comp, op, total)
+        return total
+
+    def _operand_bytes_list(self, comp: str, op: _Op) -> list:
+        # operands appear after the opcode '('; resolve through the symtab.
+        after = op.line.split(f"{op.opcode}(", 1)
+        if len(after) < 2:
+            return []
+        args = after[1].split(")", 1)[0]
+        out = []
+        for ref in _OPERAND_RE.findall(args):
+            text = self.symtab[comp].get(ref)
+            if text:
+                out.append(_bytes_of(_parse_shapes(text)))
+        return out
+
+    def _operand_bytes(self, comp: str, op: _Op) -> int:
+        return sum(self._operand_bytes_list(comp, op))
+
+    def _dot_flops(self, comp: str, op: _Op) -> float:
+        result = _parse_shapes(op.result_text)
+        out_elems = 1
+        for _dt, shape in result[:1]:
+            for d in shape:
+                out_elems *= d
+        # contraction size from the lhs operand + lhs_contracting_dims
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        dims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+        after = op.line.split("dot(", 1)
+        contraction = 1
+        if len(after) == 2 and dims:
+            first = _OPERAND_RE.findall(after[1].split(")", 1)[0])
+            if first:
+                text = self.symtab[comp].get(first[0], "")
+                shapes = _parse_shapes(text)
+                if shapes:
+                    shape = shapes[0][1]
+                    for d in dims:
+                        if d < len(shape):
+                            contraction *= shape[d]
+        return 2.0 * out_elems * contraction
+
+    def _conv_flops(self, comp: str, op: _Op) -> float:
+        result = _parse_shapes(op.result_text)
+        out_elems = 1
+        for _dt, shape in result[:1]:
+            for d in shape:
+                out_elems *= d
+        # kernel operand is the 2nd argument
+        after = op.line.split("convolution(", 1)
+        if len(after) < 2:
+            return 0.0
+        refs = _OPERAND_RE.findall(after[1].split(")", 1)[0])
+        if len(refs) < 2:
+            return 0.0
+        ksh = _parse_shapes(self.symtab[comp].get(refs[1], ""))
+        if not ksh:
+            return 0.0
+        kshape = ksh[0][1]
+        # FLOPs = 2 * out_elems * (kernel elements / output channels)
+        kelems = 1
+        for d in kshape:
+            kelems *= d
+        out_ch = kshape[-1] if kshape else 1
+        return 2.0 * out_elems * (kelems / max(out_ch, 1))
+
+    def _trip_count(self, op: _Op, cond: str) -> int:
+        m = _TRIP_RE.search(op.line)
+        if m:
+            return int(m.group(1))
+        # fallback: largest integer constant in the condition computation
+        best = 1
+        for c_op in self.computations.get(cond, []):
+            cm = re.search(r"constant\((\d+)\)", c_op.line)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        return best
+
+    def _cost_op(self, comp: str, op: _Op, total: Cost) -> None:
+        code = op.opcode
+        if code in _FREE_OPS or not code:
+            return
+        base = code[:-6] if code.endswith("-start") else (
+            code[:-5] if code.endswith("-done") else code
+        )
+        if base in COLLECTIVE_KINDS:
+            if code.endswith("-start"):
+                return  # counted at -done
+            nbytes = _bytes_of(_parse_shapes(op.result_text))
+            total.coll[base] += float(nbytes)
+            total.bytes += float(nbytes)
+            return
+        if code == "while":
+            m = _COND_BODY_RE.search(op.line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trip = self._trip_count(op, cond)
+                total.add(self.cost(body), trip)
+                total.add(self.cost(cond), trip)
+            return
+        if code in ("call", "custom-call"):
+            m = _CALLS_RE.search(op.line)
+            if m:
+                total.add(self.cost(m.group(1)))
+            total.bytes += _bytes_of(_parse_shapes(op.result_text))
+            return
+        if code == "conditional":
+            for branch in re.findall(r"branch_computations=\{([^}]*)\}", op.line):
+                for b in _OPERAND_RE.findall(branch):
+                    total.add(self.cost(b))
+            return
+        if code == "dynamic-update-slice" or (
+            code == "fusion" and "dynamic-update-slice" in op.line
+        ):
+            # In-place update: traffic is the update slice (read + write),
+            # not the whole aliased buffer.  Charge operands minus the
+            # largest (the buffer), twice.
+            if code == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    total.flops += self.cost(m.group(1)).flops
+            opb = self._operand_bytes_list(comp, op)
+            if opb:
+                total.bytes += 2.0 * (sum(opb) - max(opb))
+            return
+        if code == "dynamic-slice":
+            # Reads only the slice: charge slice read + write.
+            total.bytes += 2.0 * _bytes_of(_parse_shapes(op.result_text))
+            return
+        if code == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m:
+                callee = self.cost(m.group(1))
+                total.flops += callee.flops  # interior bytes are fused away
+            res = _bytes_of(_parse_shapes(op.result_text))
+            total.bytes += res
+            if "kind=kLoop" in op.line:
+                # Elementwise loop fusion: each operand contributes at most
+                # one output-shaped read (slices of big stacked buffers —
+                # e.g. per-layer weight picks — read only what they use).
+                total.bytes += sum(min(b, res) for b in
+                                   self._operand_bytes_list(comp, op))
+            else:
+                # kInput/kOutput (reduction) fusions read inputs fully.
+                total.bytes += self._operand_bytes(comp, op)
+            return
+        if code == "dot":
+            total.flops += self._dot_flops(comp, op)
+            total.bytes += _bytes_of(_parse_shapes(op.result_text))
+            total.bytes += self._operand_bytes(comp, op)
+            return
+        if code == "convolution":
+            total.flops += self._conv_flops(comp, op)
+            total.bytes += _bytes_of(_parse_shapes(op.result_text))
+            total.bytes += self._operand_bytes(comp, op)
+            return
+        # generic op: traffic only
+        total.bytes += _bytes_of(_parse_shapes(op.result_text))
+        total.bytes += self._operand_bytes(comp, op)
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    """Top-level helper: trip-count-aware flops / bytes / collective bytes."""
+    model = HloCostModel(hlo_text)
+    c = model.cost()
+    out = {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.coll_total,
+    }
+    out.update({f"coll_{k}": v for k, v in c.coll.items()})
+    return out

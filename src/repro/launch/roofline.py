@@ -1,0 +1,170 @@
+"""Roofline term derivation from a compiled dry-run artifact (deliverable g).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes accessed; collective bytes are
+NOT in cost_analysis, so :func:`collective_bytes` parses the post-SPMD HLO
+text and sums the result-shape sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (counting each op once;
+result size is the standard per-chip traffic proxy).  Constants: TPU v5e —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[8,4096,128]{2,1,0}  or  f32[]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind byte totals from post-optimization HLO text."""
+    totals: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        lhs, rhs = stripped.split(" = ", 1)
+        kind = None
+        for c in _COLLECTIVES:
+            # match 'all-reduce(' or 'all-reduce-start(' etc.
+            if re.match(rf"^(\(|\w|\[|,|\s)*{re.escape(c)}(-start)?\(", rhs) or rhs.startswith(
+                f"{c}("
+            ) or f" {c}(" in f" {rhs.split('(')[0]}(":
+                kind = c
+                break
+        if kind is None:
+            # cheap prefix check on the op name segment
+            op = rhs.split("(")[0].strip()
+            for c in _COLLECTIVES:
+                if op.endswith(c) or op.endswith(c + "-start"):
+                    kind = c
+                    break
+        if kind is None:
+            continue
+        # Result shapes appear in the RHS type annotation before the op name,
+        # e.g. `bf16[8,128]{1,0} all-reduce(...)`; for tuple results all
+        # element shapes are listed.  Parse shapes from the RHS up to the op.
+        head = rhs.split(kind)[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        if nbytes == 0:
+            # fall back: shapes may be on the LHS in some printers
+            nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        totals[kind] += float(nbytes)
+    totals["total"] = float(sum(totals[k] for k in _COLLECTIVES))
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float
+    bytes_per_device: float
+    peak_memory_per_device: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # collective_bytes from the partitioned HLO is already per-chip
+        # traffic (the module is the per-device program).
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "bytes_per_device": self.bytes_per_device,
+            "peak_memory_per_device": self.peak_memory_per_device,
+        }
+
+
+def model_flops_estimate(cfg, shape, n_params: int, n_active: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference) with N = active params.
+
+    D is tokens processed: B*S for train/prefill, B for one decode step.
+    """
+    n = n_active if n_active is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch
+
+
+def active_params(cfg, n_params: int) -> int:
+    """MoE: only top-k (+ shared) experts are active per token."""
+    if cfg.moe_num_experts <= 0:
+        return n_params
+    f, d, e = cfg.moe_d_ff, cfg.d_model, cfg.moe_num_experts
+    per_expert = 3 * d * f
+    routed_total = cfg.num_layers * e * per_expert
+    routed_active = cfg.num_layers * cfg.moe_top_k * per_expert
+    return n_params - routed_total + routed_active

@@ -1,0 +1,22 @@
+"""Model zoo: dense/GQA, MoE, SSM (Mamba2), hybrid (Zamba2), enc-dec
+(Whisper), VLM (Chameleon) transformer backbones + paper-scale CNNs."""
+
+from repro.models.config import (
+    INPUT_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    InputShape,
+    ModelConfig,
+    get_shape,
+    make_config,
+    pad_vocab,
+)
+from repro.models.registry import ModelApi, get_model
+
+__all__ = [
+    "INPUT_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "TRAIN_4K",
+    "InputShape", "ModelConfig", "get_shape", "make_config", "pad_vocab",
+    "ModelApi", "get_model",
+]

@@ -1,0 +1,140 @@
+"""Small CNNs for the paper-scale experiments (LeNet-class, §6 Table 2).
+
+The paper's dataset experiments use 5-layer CNNs (2 conv + 3 dense) as the
+common network architecture over MNIST-class inputs.  These blocks feed the
+task-graph machinery: the common architecture is cut into ``D + 1`` blocks at
+the branch points, each block is an (init, apply) pair, and
+:mod:`repro.models.multitask` assembles them into a
+:class:`~repro.core.executor.MultitaskProgram`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import BlockCost
+
+Params = Dict[str, Any]
+BlockInit = Callable[[jax.Array], Params]
+BlockApply = Callable[[Params, jax.Array], jax.Array]
+
+
+def conv2d(params: Params, x: jax.Array) -> jax.Array:
+    """3x3 SAME conv + bias.  x: (B, H, W, C)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + params["b"]
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def leaky_relu(x: jax.Array) -> jax.Array:
+    # The paper's C library implements leaky ReLU (§5.2).
+    return jax.nn.leaky_relu(x, negative_slope=0.01)
+
+
+def _conv_init(key, cin: int, cout: int) -> Params:
+    kw, _ = jax.random.split(key)
+    std = 1.0 / math.sqrt(9 * cin)
+    return {
+        "w": std * jax.random.truncated_normal(kw, -2, 2, (3, 3, cin, cout)),
+        "b": jnp.zeros((cout,)),
+    }
+
+
+def _dense_init(key, din: int, dout: int) -> Params:
+    std = 1.0 / math.sqrt(din)
+    return {
+        "w": std * jax.random.truncated_normal(key, -2, 2, (din, dout)),
+        "b": jnp.zeros((dout,)),
+    }
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def build_lenet5_blocks(
+    input_hw: Tuple[int, int, int] = (28, 28, 1),
+    channels: Sequence[int] = (8, 16),
+    dense_dims: Sequence[int] = (64, 32),
+    num_blocks: int = 4,
+) -> Tuple[List[BlockInit], List[BlockApply], List[BlockCost], int]:
+    """The paper's 5-layer CNN cut into ``num_blocks`` task-graph blocks.
+
+    Returns (block_inits, block_applies, per-block costs, feature_dim).
+    Block layout for the default 4 blocks (3 branch points, §5.3/§7):
+      B0: conv1+pool, B1: conv2+pool+flatten, B2: dense1, B3: dense2.
+    """
+    h, w, cin = input_hw
+    c1, c2 = channels
+    d1, d2 = dense_dims
+    h2, w2 = h // 2, w // 2
+    h4, w4 = h2 // 2, w2 // 2
+    flat = h4 * w4 * c2
+
+    inits: List[BlockInit] = [
+        lambda k: _conv_init(k, cin, c1),
+        lambda k: _conv_init(k, c1, c2),
+        lambda k: _dense_init(k, flat, d1),
+        lambda k: _dense_init(k, d1, d2),
+    ]
+
+    def apply0(p, x):
+        return maxpool2(leaky_relu(conv2d(p, x)))
+
+    def apply1(p, x):
+        y = maxpool2(leaky_relu(conv2d(p, x)))
+        return y.reshape(y.shape[0], -1)
+
+    def apply2(p, x):
+        return leaky_relu(dense(p, x))
+
+    def apply3(p, x):
+        return leaky_relu(dense(p, x))
+
+    applies: List[BlockApply] = [apply0, apply1, apply2, apply3]
+
+    # Per-sample costs: weights in bytes (fp32), FLOPs = 2 * MACs.
+    costs = [
+        BlockCost(
+            weight_bytes=4.0 * (9 * cin * c1 + c1),
+            flops=2.0 * 9 * cin * c1 * h * w,
+            act_bytes=4.0 * h2 * w2 * c1,
+        ),
+        BlockCost(
+            weight_bytes=4.0 * (9 * c1 * c2 + c2),
+            flops=2.0 * 9 * c1 * c2 * h2 * w2,
+            act_bytes=4.0 * flat,
+        ),
+        BlockCost(
+            weight_bytes=4.0 * (flat * d1 + d1),
+            flops=2.0 * flat * d1,
+            act_bytes=4.0 * d1,
+        ),
+        BlockCost(
+            weight_bytes=4.0 * (d1 * d2 + d2),
+            flops=2.0 * d1 * d2,
+            act_bytes=4.0 * d2,
+        ),
+    ]
+    assert num_blocks == 4, "the paper-scale CNN is fixed at 4 blocks (3 BPs)"
+    return inits, applies, costs, d2
+
+
+def head_init(key, feat_dim: int, num_classes: int) -> Params:
+    return _dense_init(key, feat_dim, num_classes)
+
+
+def head_apply(params: Params, x: jax.Array) -> jax.Array:
+    return dense(params, x)

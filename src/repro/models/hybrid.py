@@ -1,0 +1,307 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a globally-shared attention block
+(arXiv:2411.15242).
+
+Zamba2 interleaves Mamba2 blocks with a *single* shared full-attention block
+invoked every ``hybrid_attn_period`` layers; invocations differ through
+cheap per-invocation input norms AND low-rank (LoRA) deltas on the shared
+block's q/kv projections (``hybrid_lora_rank``), matching Zamba2's design.  The shared block is the in-architecture
+mirror of Antler's shared task-graph blocks: one set of weights reused at
+many points of the computation (noted in DESIGN.md §5).
+
+Structure (for ``num_layers = P * n_inv``)::
+
+    for i in range(n_inv):            # outer scan over super-blocks
+        for j in range(P):            # inner scan over Mamba2 layers
+            x += mamba2(x)
+        x += shared_attn(norm_i(x))   # shared weights, per-invocation norm
+
+Decode uses :class:`~repro.models.cache.HybridCache` — SSM state for every
+Mamba2 layer and a KV cache per shared-attention invocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import ssm as M
+from repro.models.cache import HybridCache, KVCache, SSMCache
+from repro.models.config import ModelConfig
+from repro.sharding.policy import ShardingPolicy, shard_act
+
+Params = Dict[str, Any]
+
+
+def _n_inv(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.hybrid_attn_period == 0, (
+        "hybrid depth must be a multiple of hybrid_attn_period"
+    )
+    return cfg.num_layers // cfg.hybrid_attn_period
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ke, km, ka, kn = jax.random.split(key, 4)
+    n_inv, period = _n_inv(cfg), cfg.hybrid_attn_period
+    layer_keys = jax.random.split(km, cfg.num_layers).reshape(n_inv, period, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: M.init_mamba_block(k, cfg)))(layer_keys)
+    inv_keys = jax.random.split(kn, n_inv)
+    inv_norms = jax.vmap(
+        lambda k: L.init_rmsnorm(cfg.d_model, cfg.params_dtype())
+    )(inv_keys)
+    params = {
+        "embed": L.init_embed(ke, cfg),
+        "mamba": mamba,                    # leaves: (n_inv, period, ...)
+        "shared_attn": L.init_attention(ka, cfg),   # ONE set of weights
+        "shared_mlp": L.init_mlp(jax.random.fold_in(ka, 1), cfg),
+        "inv_norms": inv_norms,            # (n_inv, d_model)
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.params_dtype()),
+    }
+    if cfg.hybrid_lora_rank > 0:
+        # Zamba2's per-invocation LoRA deltas on the shared block's q/kv
+        # projections: A init ~ N(0, 1/sqrt(D)), B init zero (standard LoRA
+        # zero-start so invocation 0 == the shared weights exactly).
+        r = cfg.hybrid_lora_rank
+        d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        dtype = cfg.params_dtype()
+        kq, kkv = jax.random.split(jax.random.fold_in(ka, 2))
+        def lora_a(k, shape):
+            return jax.vmap(
+                lambda kk: L.dense_init(kk, shape[0], shape[1:], dtype)
+            )(jax.random.split(k, n_inv))
+        params["inv_lora"] = {
+            "aq": lora_a(kq, (d, r)),                     # (n_inv, D, r)
+            "bq": jnp.zeros((n_inv, r, hq, hd), dtype),
+            "akv": lora_a(kkv, (d, r)),
+            "bkv": jnp.zeros((n_inv, r, 2, hk, hd), dtype),
+        }
+    return params
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    mspec = M.spec_mamba_block(cfg, policy)
+    stacked = jax.tree.map(
+        lambda s: P(None, None, *tuple(s)), mspec, is_leaf=lambda v: isinstance(v, P)
+    )
+    return {
+        "embed": L.spec_embed(cfg, policy),
+        "mamba": stacked,
+        "shared_attn": L.spec_attention(policy),
+        "shared_mlp": L.spec_mlp(cfg, policy),
+        "inv_norms": jax.tree.map(
+            lambda s: P(None, *tuple(s)), L.spec_rmsnorm(),
+            is_leaf=lambda v: isinstance(v, P),
+        ),
+        **({"inv_lora": {
+            "aq": P(None, None, None),
+            "bq": P(None, None, policy.physical("model"), None),
+            "akv": P(None, None, None),
+            "bkv": P(None, None, None, None, None),
+        }} if cfg.hybrid_lora_rank > 0 else {}),
+        "final_norm": L.spec_rmsnorm(),
+    }
+
+
+def _lora_qkv(params: Params, inv_lora: Optional[Params], h: jax.Array):
+    """Shared-weight q/k/v projections + per-invocation LoRA deltas."""
+    ap = params["shared_attn"]
+    q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"])
+    k, v = L.project_kv(ap, h)
+    if inv_lora is not None:
+        zq = h @ inv_lora["aq"]                        # (B,S,r)
+        q = q + jnp.einsum("bsr,rhk->bshk", zq, inv_lora["bq"])
+        zkv = h @ inv_lora["akv"]
+        dkv = jnp.einsum("bsr,rthk->bsthk", zkv, inv_lora["bkv"])
+        k = k + dkv[:, :, 0]
+        v = v + dkv[:, :, 1]
+    return q, k, v
+
+
+def _shared_attn_apply(
+    params: Params,
+    inv_norm: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    q_pos: jax.Array,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_len: Optional[jax.Array] = None,
+    inv_lora: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    h = L.rmsnorm(inv_norm, x, cfg.norm_eps)
+    ap = params["shared_attn"]
+    q, k_new, v_new = _lora_qkv(params, inv_lora, h)
+    q = L.apply_rope(q, q_pos, cfg.rope_theta)
+    new_kv = None
+    if kv is not None:
+        # decode: append this step's K/V to the invocation's cache
+        ck, cv = kv
+        t = ck.shape[1]
+        k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
+        idx = (cache_len % t).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype), (0, idx, 0, 0))
+        new_kv = (ck, cv)
+        k_pos = jnp.arange(t, dtype=jnp.int32)
+        kv_valid = (k_pos[None, :] <= cache_len) & jnp.ones(
+            (x.shape[0], t), dtype=bool
+        )
+        attn = L.attention_decode(
+            q, ck, cv, k_pos, cache_len, window=cfg.sliding_window,
+            kv_valid=kv_valid,
+        )
+    else:
+        k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
+        attn = L.attention_chunked(
+            q, k_new, v_new, q_pos, q_pos, window=cfg.sliding_window,
+            causal=True, chunk=cfg.attn_chunk,
+        )
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, ap["wo"])
+    x = x + L.mlp_block(params["shared_mlp"], h, cfg, policy)
+    return shard_act(x, policy, "batch", None, None), new_kv
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    use_chunked: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy)
+    q_pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def inner(x, lp):
+        y, _ = M.mamba_block(lp, x, cfg, policy)
+        return x + y, None
+
+    if cfg.remat:
+        inner = jax.checkpoint(
+            inner, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    def outer(x, xs):
+        mamba_stack, inv_norm, inv_lora = xs
+        x, _ = jax.lax.scan(inner, x, mamba_stack)
+        x, _ = _shared_attn_apply(
+            params, inv_norm, x, cfg, policy, q_pos, inv_lora=inv_lora
+        )
+        return x, None
+
+    x, _ = jax.lax.scan(
+        outer, x,
+        (params["mamba"], params["inv_norms"], params.get("inv_lora")),
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg, policy)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(
+    params: Params, tokens: jax.Array, cfg: ModelConfig, policy: ShardingPolicy
+) -> Tuple[jax.Array, HybridCache]:
+    bsz, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy)
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+    w = cfg.ssm_conv_width
+    n_inv, period = _n_inv(cfg), cfg.hybrid_attn_period
+
+    def inner(x, lp):
+        # Mamba block + cache extraction (same derivation as ssm.prefill).
+        u = L.rmsnorm(lp["norm"], x, cfg.norm_eps)
+        z, xin0, b0, c0, dt_raw0 = M._in_proj(lp, u)
+        conv_in = jnp.concatenate([xin0, b0, c0], -1)
+        tail = conv_in[:, -(w - 1):, :]
+        conv_out = jax.nn.silu(
+            M.causal_conv(conv_in, lp["conv"]).astype(jnp.float32)
+        ).astype(conv_in.dtype)
+        di, n = cfg.ssm_d_inner, cfg.ssm_state
+        xin, b_in, c_in = jnp.split(conv_out, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw0.astype(jnp.float32) + lp["dt_bias"])
+        a = -jnp.exp(lp["a_log"])
+        xh = xin.reshape(bsz, s, cfg.ssm_n_heads, cfg.ssm_head_dim)
+        y, final_state = M.ssd_chunked(xh, dt, a, b_in, c_in, cfg.ssm_chunk)
+        y = y + lp["d_skip"][None, None, :, None].astype(y.dtype) * xh
+        gated = y.reshape(bsz, s, di) * jax.nn.silu(
+            z.astype(jnp.float32)
+        ).astype(y.dtype)
+        gated = L.rmsnorm(lp["gated_norm"], gated, cfg.norm_eps)
+        return x + gated @ lp["wo"], (tail, final_state)
+
+    def outer(x, xs):
+        mamba_stack, inv_norm, inv_lora = xs
+        x, ssm_caches = jax.lax.scan(inner, x, mamba_stack)
+        # Shared attention with fresh K/V for the invocation's cache.
+        h = L.rmsnorm(inv_norm, x, cfg.norm_eps)
+        ap = params["shared_attn"]
+        q, k, v = _lora_qkv(params, inv_lora, h)
+        q = L.apply_rope(q, q_pos, cfg.rope_theta)
+        k = L.apply_rope(k, q_pos, cfg.rope_theta)
+        attn = L.attention_chunked(
+            q, k, v, q_pos, q_pos, window=cfg.sliding_window,
+            causal=True, chunk=cfg.attn_chunk,
+        )
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, ap["wo"])
+        x = x + L.mlp_block(params["shared_mlp"], h, cfg, policy)
+        return x, (ssm_caches, (k, v))
+
+    x, (ssm_caches, kvs) = jax.lax.scan(
+        outer, x, (params["mamba"], params["inv_norms"], params.get("inv_lora"))
+    )
+    conv_t, state_t = ssm_caches
+    ssm = SSMCache(
+        conv=conv_t.reshape(n_inv * period, *conv_t.shape[2:]),
+        state=state_t.reshape(n_inv * period, *state_t.shape[2:]),
+    )
+    kv = KVCache(k=kvs[0], v=kvs[1])
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg, policy)
+    return logits[:, 0], HybridCache(ssm=ssm, kv=kv)
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,
+    cache: HybridCache,
+    cache_len: jax.Array,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+) -> Tuple[jax.Array, HybridCache]:
+    x = L.embed_tokens(params["embed"], token[:, None], cfg, policy)
+    q_pos = jnp.reshape(cache_len, (1,)).astype(jnp.int32)
+    n_inv, period = _n_inv(cfg), cfg.hybrid_attn_period
+    conv = cache.ssm.conv.reshape(n_inv, period, *cache.ssm.conv.shape[1:])
+    state = cache.ssm.state.reshape(n_inv, period, *cache.ssm.state.shape[1:])
+
+    def inner(x, xs):
+        lp, cc, sc = xs
+        y, new_cache = M.mamba_block(lp, x, cfg, policy, cache=(cc, sc))
+        return x + y, new_cache
+
+    def outer(x, xs):
+        mamba_stack, inv_norm, inv_lora, cc, sc, ck, cv = xs
+        x, ssm_new = jax.lax.scan(inner, x, (mamba_stack, cc, sc))
+        x, kv_new = _shared_attn_apply(
+            params, inv_norm, x, cfg, policy, q_pos,
+            kv=(ck, cv), cache_len=cache_len, inv_lora=inv_lora,
+        )
+        return x, (ssm_new, kv_new)
+
+    x, (ssm_new, kv_new) = jax.lax.scan(
+        outer, x,
+        (params["mamba"], params["inv_norms"], params.get("inv_lora"),
+         conv, state, cache.kv.k, cache.kv.v),
+    )
+    conv_n, state_n = ssm_new
+    new_cache = HybridCache(
+        ssm=SSMCache(
+            conv=conv_n.reshape(n_inv * period, *conv_n.shape[2:]),
+            state=state_n.reshape(n_inv * period, *state_n.shape[2:]),
+        ),
+        kv=KVCache(k=kv_new[0], v=kv_new[1]),
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg, policy)
+    return logits[:, 0], new_cache

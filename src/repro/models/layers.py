@@ -1,0 +1,462 @@
+"""Shared neural-net layers for every architecture family (pure JAX).
+
+Conventions:
+* a *module* is an ``init_*(key, cfg) -> params`` / ``apply(params, ...)``
+  pair of pure functions; params are plain dict pytrees;
+* every ``init_*`` has a matching ``spec_*`` returning a PartitionSpec tree
+  with the same structure (tested), driven by a
+  :class:`~repro.sharding.policy.ShardingPolicy`;
+* attention is grouped-query with optional sliding window, implemented both
+  as a single dense einsum (small shapes) and as an online-softmax KV-chunk
+  scan (``attention_chunked``) that keeps the score matrix O(S * chunk) —
+  the jnp oracle of the Pallas flash kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.sharding.policy import ShardingPolicy, shard_act
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+# --------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Truncated-normal fan-in init, matching standard transformer practice."""
+    shape = (in_dim,) + tuple(out_shape)
+    std = 1.0 / math.sqrt(in_dim)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def spec_rmsnorm() -> Params:
+    return {"scale": P(None)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs. ``x``: (..., S, H, Dh); ``positions``: (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional sliding window; dense + chunked variants)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.params_dtype()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": dense_init(kq, d, (cfg.n_heads, hd), dtype),
+        # K and V fused on an unsharded stack axis (§Perf B2): one matmul ->
+        # one dx all-reduce in backward instead of two.
+        "w_kv": jnp.stack(
+            [
+                dense_init(kk, d, (cfg.n_kv_heads, hd), dtype),
+                dense_init(kv, d, (cfg.n_kv_heads, hd), dtype),
+            ],
+            axis=1,
+        ),  # (D, 2, Hk, hd)
+        "wo": dense_init(ko, cfg.n_heads * hd, (d,), dtype).reshape(
+            cfg.n_heads, hd, d
+        ),
+    }
+
+
+def project_kv(params: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    kv = jnp.einsum("bsd,dthk->bsthk", x, params["w_kv"])
+    return kv[:, :, 0], kv[:, :, 1]
+
+
+def spec_attention(policy: ShardingPolicy) -> Params:
+    """Ideal specs; ``fit_specs`` drops axes that do not divide (e.g. MQA's
+    single KV head over a 16-way model axis falls back to replicated)."""
+    m, f = policy.physical("model"), policy.physical("fsdp")
+    return {
+        "wq": P(f, m, None),
+        "w_kv": P(f, None, m, None),
+        "wo": P(m, None, f),
+    }
+
+
+def _causal_window_mask(
+    q_pos: jax.Array, k_pos: jax.Array, window: Optional[int]
+) -> jax.Array:
+    """(..., S, T) True where attention is allowed."""
+    mask = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        mask &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return mask
+
+
+def attention_dense(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    window: Optional[int] = None,
+    causal: bool = True,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference attention: full score matrix.  q: (B,S,Hq,Dh); k/v: (B,T,Hk,Dh)."""
+    b, s, hq, dh = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, s, hk, g, dh)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(dh)
+    if causal:
+        mask = _causal_window_mask(q_pos, k_pos, window)  # (B?,S,T) or (S,T)
+        while mask.ndim < scores.ndim:
+            mask = mask[:, None] if mask.ndim > 2 else mask[None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    if kv_valid is not None:
+        kvm = kv_valid[:, None, None, None, :]
+        scores = jnp.where(kvm, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", w, v)
+    return out.reshape(b, s, hq, dh)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    window: Optional[int] = None,
+    causal: bool = True,
+    chunk: int = 1024,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax attention: scan over KV chunks, O(S*chunk) live scores.
+
+    Functionally identical to :func:`attention_dense`; used for long
+    sequences so the lowered HLO never materialises the (S, T) score matrix.
+    This is the pure-jnp oracle of ``repro.kernels.flash_attention``.
+    """
+    b, s, hq, dh = q.shape
+    t = k.shape[1]
+    hk = k.shape[2]
+    g = hq // hk
+    if t % chunk != 0:
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, pad),), constant_values=jnp.iinfo(jnp.int32).max)
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+        t = k.shape[1]
+    n_chunks = t // chunk
+    qg = (q.reshape(b, s, hk, g, dh).astype(jnp.float32)) / math.sqrt(dh)
+
+    kc = k.reshape(b, n_chunks, chunk, hk, dh)
+    vc = v.reshape(b, n_chunks, chunk, hk, dh)
+    pc = k_pos.reshape(n_chunks, chunk)
+    valc = (
+        kv_valid.reshape(b, n_chunks, chunk) if kv_valid is not None else None
+    )
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        if valc is None:
+            k_i, v_i, p_i = inputs
+            val_i = None
+        else:
+            k_i, v_i, p_i, val_i = inputs
+        scores = jnp.einsum("bshgd,bthd->bhgst", qg, k_i.astype(jnp.float32))
+        if causal:
+            msk = _causal_window_mask(q_pos, p_i, window)
+            while msk.ndim < scores.ndim:
+                msk = msk[None]
+            scores = jnp.where(msk, scores, NEG_INF)
+        if val_i is not None:
+            scores = jnp.where(val_i[:, None, None, None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, s), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, hk, g, s, dh), dtype=jnp.float32)
+    xs = (
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc)
+        if valc is None
+        else (
+            kc.transpose(1, 0, 2, 3, 4),
+            vc.transpose(1, 0, 2, 3, 4),
+            pc,
+            valc.transpose(1, 0, 2),
+        )
+    )
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dh)
+    return out.astype(q.dtype)
+
+
+def attention_decode(
+    q: jax.Array,        # (B, 1, Hq, Dh)
+    k: jax.Array,        # (B, T, Hk, Dh)  cache, stays in its storage dtype
+    v: jax.Array,
+    k_pos: jax.Array,    # (T,) absolute positions of cache slots
+    q_pos_scalar: jax.Array,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Single-token decode attention: one pass over the cache, no chunking.
+
+    The score tensor is only (B, Hk, G, T) so nothing needs the online
+    softmax; K/V are read ONCE in their storage dtype with fp32 accumulation
+    via ``preferred_element_type`` — no whole-cache convert/copy (the §Perf
+    C1 iteration; the scan-based path cost ~20x the roofline here).
+    """
+    b, s, hq, dh = q.shape
+    assert s == 1
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, dh)
+    scores = jnp.einsum(
+        "bhgd,bthd->bhgt", qg, k, preferred_element_type=jnp.float32
+    )
+    scores *= 1.0 / math.sqrt(dh)
+    mask = k_pos[None, None, None, :] <= q_pos_scalar
+    if window is not None:
+        mask &= (q_pos_scalar - k_pos[None, None, None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgt,bthd->bhgd", w.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def attention_block(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    q_pos: jax.Array,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_len: Optional[jax.Array] = None,
+    use_chunked: bool = True,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full attention sub-layer: proj -> rope -> attend -> out-proj.
+
+    With ``kv_cache=(k, v)`` of shape (B, T, Hk, Dh) and ``cache_len``
+    (current fill), performs decode: writes the new K/V at ``cache_len`` and
+    attends over the filled prefix.  Returns (output, updated cache).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k, v = project_kv(params, x)
+    q = shard_act(q, policy, "batch", None, "model", None)
+    # K/V head sharding is left to GSPMD propagation: with few KV heads
+    # (GQA/MQA) the head axis may not divide the model axis.
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        t = ck.shape[1]
+        # Scatter this step's K/V into the ring/linear cache at cache_len.
+        idx = (cache_len % t).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        new_cache = (ck, cv)
+        k_pos_full = jnp.arange(t, dtype=jnp.int32)
+        if cfg.sliding_window is not None and t <= cfg.sliding_window:
+            # Ring buffer: absolute position of slot i.
+            wrapped = cache_len - ((idx - k_pos_full) % t)
+            k_pos = wrapped
+            kv_valid = (k_pos >= 0)[None, :].astype(bool) & jnp.ones(
+                (x.shape[0], t), dtype=bool
+            )
+            k_pos = jnp.maximum(k_pos, 0)
+        else:
+            k_pos = k_pos_full
+            kv_valid = (k_pos_full[None, :] <= cache_len) & jnp.ones(
+                (x.shape[0], t), dtype=bool
+            )
+        if q.shape[1] == 1:
+            # Single-token decode: one pass over the cache (§Perf C1).
+            out = attention_decode(
+                q, ck, cv, k_pos, cache_len,
+                window=cfg.sliding_window, kv_valid=kv_valid,
+            )
+        else:
+            attend = attention_chunked if use_chunked else attention_dense
+            out = attend(
+                q, ck, cv, q_pos, k_pos,
+                window=cfg.sliding_window, causal=causal,
+                kv_valid=kv_valid,
+                **({"chunk": cfg.attn_chunk} if attend is attention_chunked else {}),
+            )
+    else:
+        k_pos = q_pos
+        attend = attention_chunked if use_chunked else attention_dense
+        out = attend(
+            q, k, v, q_pos, k_pos,
+            window=cfg.sliding_window, causal=causal,
+            **({"chunk": cfg.attn_chunk} if attend is attention_chunked else {}),
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    y = shard_act(y, policy, "batch", None, None)
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    dtype = cfg.params_dtype()
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.activation == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        # Gate and up fused on an unsharded stacking axis (§Perf B1): one
+        # matmul -> ONE dx all-reduce in backward instead of two.
+        return {
+            "w_gu": jnp.stack(
+                [dense_init(k1, d, (d_ff,), dtype),
+                 dense_init(k2, d, (d_ff,), dtype)], axis=1,
+            ),  # (D, 2, F)
+            "w_down": dense_init(k3, d_ff, (d,), dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d, (d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, (d,), dtype),
+    }
+
+
+def spec_mlp(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    m, f = policy.physical("model"), policy.physical("fsdp")
+    if cfg.activation == "swiglu":
+        return {
+            "w_gu": P(f, None, m),
+            "w_down": P(m, f),
+        }
+    return {"w_up": P(f, m), "w_down": P(m, f)}
+
+
+def mlp_block(
+    params: Params, x: jax.Array, cfg: ModelConfig, policy: ShardingPolicy
+) -> jax.Array:
+    if cfg.activation == "swiglu":
+        gu = jnp.einsum("bsd,dkf->bskf", x, params["w_gu"])
+        g, u = gu[:, :, 0], gu[:, :, 1]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    else:
+        h = x @ params["w_up"]
+        if cfg.activation == "squared_relu":
+            # Nemotron-4 (arXiv:2402.16819) uses squared ReLU.
+            r = jnp.maximum(h, 0)
+            h = (r * r).astype(h.dtype)
+        elif cfg.activation == "gelu":
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+        else:
+            raise ValueError(f"unknown activation {cfg.activation}")
+    h = shard_act(h, policy, "batch", None, "model")
+    y = h @ params["w_down"]
+    return shard_act(y, policy, "batch", None, None)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": embed_init(k1, cfg.vocab_size, cfg.d_model, cfg.params_dtype())}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, (cfg.vocab_size,), cfg.params_dtype())
+    return p
+
+
+def spec_embed(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    m, f = policy.physical("model"), policy.physical("fsdp")
+    p = {"embedding": P(m, f)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = P(f, m)
+    return p
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                 policy: ShardingPolicy) -> jax.Array:
+    x = params["embedding"].astype(cfg.activation_dtype())[tokens]
+    return shard_act(x, policy, "batch", None, None)
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig,
+            policy: ShardingPolicy) -> jax.Array:
+    w = (
+        params["embedding"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cfg.activation_dtype())
+    logits = x @ w
+    return shard_act(logits, policy, "batch", None, "model")

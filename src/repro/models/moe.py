@@ -1,0 +1,204 @@
+"""Mixture-of-experts MLP layer (Mixtral-style top-k + Qwen2-MoE shared
+experts).
+
+Dispatch is the **group-local gather** formulation: tokens are split into
+groups (one group per batch row during training, so dispatch never crosses
+the data-parallel axis); within each group the router's top-k choices are
+sorted by expert and gathered into a capacity-padded ``(E, C, D)`` buffer per
+group; expert FFNs run as one batched einsum over stacked expert weights;
+results scatter-add back weighted by the router gate.  Overflowing tokens
+beyond each expert's capacity are dropped (standard capacity-factor
+behaviour) and counted in the aux outputs.
+
+With ``policy.expert`` set (beyond-paper §Perf iteration), stacked expert
+weights shard over the expert axis and GSPMD inserts the all_to_all
+dispatch/return — the production expert-parallel layout.
+
+Qwen2-MoE's *shared experts* (always-on, added to the routed output) are the
+in-architecture mirror of Antler's shared task-graph blocks: computation
+every "task" (token route) reuses unconditionally.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.policy import ShardingPolicy, shard_act
+
+Params = Dict[str, Any]
+
+
+def init_moe_mlp(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.params_dtype()
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.moe_num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    params: Params = {
+        "router": (std * jax.random.truncated_normal(kr, -2, 2, (d, e))).astype(
+            jnp.float32
+        ),
+        # Gate/up fused on an unsharded stacking axis (Perf B1): halves the
+        # big (G,E,C,D) dx all-reduces of the expert einsums in backward.
+        "w_gu": jnp.stack(
+            [
+                (std * jax.random.truncated_normal(kg, -2, 2, (e, d, f))).astype(dtype),
+                (std * jax.random.truncated_normal(ku, -2, 2, (e, d, f))).astype(dtype),
+            ],
+            axis=2,
+        ),  # (E, D, 2, F)
+        "w_down": (
+            (1.0 / math.sqrt(f))
+            * jax.random.truncated_normal(kd, -2, 2, (e, f, d))
+        ).astype(dtype),
+    }
+    if cfg.moe_num_shared_experts > 0:
+        fs = cfg.moe_d_ff * cfg.moe_num_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        params["shared"] = {
+            "w_gu": jnp.stack(
+                [dense_init(k1, d, (fs,), dtype), dense_init(k2, d, (fs,), dtype)],
+                axis=1,
+            ),  # (D, 2, Fs)
+            "w_down": dense_init(k3, fs, (d,), dtype),
+        }
+    return params
+
+
+def spec_moe_mlp(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    m, f = policy.physical("model"), policy.physical("fsdp")
+    e = policy.physical("expert")
+    if e is not None:
+        # Expert parallelism: expert dim over the expert axis, FFN dims whole.
+        expert_spec = {
+            "w_gu": P(e, f, None, None),
+            "w_down": P(e, None, f),
+        }
+    else:
+        # Baseline: experts co-located, tensor-parallel inside each expert.
+        expert_spec = {
+            "w_gu": P(None, f, None, m),
+            "w_down": P(None, m, f),
+        }
+    spec: Params = {"router": P(None, None), **expert_spec}
+    if cfg.moe_num_shared_experts > 0:
+        spec["shared"] = {
+            "w_gu": P(f, None, m),
+            "w_down": P(m, f),
+        }
+    return spec
+
+
+def _route(
+    router: jax.Array, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing.  x: (G, S, D) -> expert ids (G,S,k), gates (G,S,k),
+    full router probs (G,S,E) for the aux loss."""
+    logits = (x.astype(jnp.float32) @ router).astype(jnp.float32)  # (G,S,E)
+    real = cfg.moe_real_experts or cfg.moe_num_experts
+    if real < cfg.moe_num_experts:
+        # Padding experts (§Perf B5): mask them out of routing entirely.
+        pad_mask = jnp.arange(cfg.moe_num_experts) >= real
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(logits, cfg.moe_top_k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)  # renormalise over chosen k
+    return expert_ids, gates, probs
+
+
+def load_balance_loss(probs: jax.Array, expert_ids: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-Transformer aux loss: E * sum_e f_e * P_e."""
+    e = cfg.moe_num_experts
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)  # (G,S,k,E)
+    frac_tokens = onehot.sum(axis=2).mean(axis=(0, 1))  # (E,)
+    mean_prob = probs.mean(axis=(0, 1))
+    return e * jnp.sum(frac_tokens * mean_prob)
+
+
+def moe_mlp(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply the MoE layer.  x: (B, S, D).  Returns (y, aux_loss).
+
+    Grouping: one group per batch row when S is large (training/prefill) so
+    dispatch stays data-local; a single global group for decode (S == 1).
+    """
+    b, s, d = x.shape
+    if s >= 64:
+        xg = x  # (G=B, S, D)
+    else:
+        xg = x.reshape(1, b * s, d)  # decode: one group over the batch
+    g, sg, _ = xg.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    cap = max(int(math.ceil(sg * k / e * cfg.moe_capacity_factor)), k)
+
+    expert_ids, gates, probs = _route(params["router"], xg, cfg)
+    aux = load_balance_loss(probs, expert_ids, cfg)
+
+    # ---- build the (G, E, C) dispatch table by sorting (token, expert) ----
+    flat_e = expert_ids.reshape(g, sg * k)              # (G, S*k)
+    flat_tok = jnp.repeat(jnp.arange(sg), k)[None, :].repeat(g, axis=0)
+    flat_gate = gates.reshape(g, sg * k)
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)    # group tokens by expert
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sgate = jnp.take_along_axis(flat_gate, order, axis=-1)
+
+    # rank of each entry within its expert run = idx - first_idx_of_expert
+    idx = jnp.arange(sg * k)[None, :]
+    first = jax.vmap(lambda seq: jnp.searchsorted(seq, jnp.arange(e)))(se)  # (G,E)
+    rank = idx - jnp.take_along_axis(first, se, axis=-1)
+    keep = rank < cap
+
+    # (G, E, C) token-index table; empty slots hold the out-of-bounds index
+    # ``sg`` so the gather fills zeros and the scatter drops them — no pad
+    # row, which would make (sg+1) unevenly sharded and force GSPMD to
+    # insert per-layer collective-permutes (§Perf B3).
+    table = jnp.full((g, e, cap), sg, dtype=jnp.int32)
+    gate_tab = jnp.zeros((g, e, cap), dtype=jnp.float32)
+    gi = jnp.arange(g)[:, None]
+    slot = jnp.where(keep, rank, cap)
+    table = table.at[gi, se, slot].set(st.astype(jnp.int32), mode="drop")
+    gate_tab = gate_tab.at[gi, se, slot].set(sgate, mode="drop")
+
+    # Keep the E axis intact through the gather so GSPMD can propagate
+    # expert sharding into the dispatch tensor (flattening E x C here blocks
+    # the expert-parallel layout entirely — §Perf B5 diagnosis).
+    xe = jnp.take_along_axis(
+        xg[:, None, :, :], table[:, :, :, None], axis=2,
+        mode="fill", fill_value=0,
+    )  # (G, E, C, D)
+    xe = shard_act(xe, policy, "batch", "expert", None, None)
+
+    # ---- expert FFNs as batched einsums over fused stacked weights ----
+    wgu, wd = params["w_gu"], params["w_down"]
+    hgu = jnp.einsum("gecd,edkf->geckf", xe, wgu)
+    hg, hu = hgu[..., 0, :], hgu[..., 1, :]
+    h = jax.nn.silu(hg.astype(jnp.float32)).astype(hu.dtype) * hu
+    h = shard_act(h, policy, "batch", "expert", None, "model" if policy.expert is None else None)
+    ye = jnp.einsum("gecf,efd->gecd", h, wd)  # (G, E, C, D)
+
+    # ---- combine: scatter-add back to token positions, gate-weighted ----
+    ye = ye * gate_tab[..., None].astype(ye.dtype)
+    out = jnp.zeros((g, sg, d), ye.dtype)
+    out = out.at[gi[:, :, None], table, :].add(ye, mode="drop")
+
+    if "shared" in params:
+        sh = params["shared"]
+        hgu_s = jnp.einsum("gsd,dkf->gskf", xg, sh["w_gu"])
+        hs = jax.nn.silu(hgu_s[:, :, 0].astype(jnp.float32)).astype(
+            xg.dtype
+        ) * hgu_s[:, :, 1]
+        out = out + hs @ sh["w_down"]
+
+    y = out.reshape(b, s, d)
+    return shard_act(y, policy, "batch", None, None), aux

@@ -1,0 +1,126 @@
+"""Uniform model API across families.
+
+``get_model(cfg)`` returns a :class:`ModelApi` whose members have identical
+signatures regardless of family, so the trainer, server, dry-run and
+benchmarks never branch on architecture:
+
+  init(key)                         -> params
+  param_specs(policy)               -> PartitionSpec tree matching params
+  forward(params, batch, policy)    -> (logits, aux_loss)   [teacher-forced]
+  prefill(params, batch, policy)    -> (last_logits, cache)
+  decode_step(params, token, cache, cache_len, policy) -> (logits, cache)
+  cache_shape(batch, seq_len)       -> ShapeDtypeStruct cache pytree
+  cache_spec(policy)                -> PartitionSpec cache pytree
+
+For `encdec`, ``batch`` is a dict with ``features`` and ``tokens``; all other
+families take a token array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models import cache as C
+from repro.models.config import ModelConfig
+from repro.sharding.policy import ShardingPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    param_specs: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_shape: Callable
+    cache_spec: Callable
+
+
+def _transformer_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: transformer.init(key, cfg),
+        param_specs=lambda policy: transformer.param_specs(cfg, policy),
+        forward=lambda p, batch, policy: transformer.forward(p, batch, cfg, policy),
+        prefill=lambda p, batch, policy: transformer.prefill(p, batch, cfg, policy),
+        decode_step=lambda p, tok, cache, n, policy: transformer.decode_step(
+            p, tok, cache, n, cfg, policy
+        ),
+        cache_shape=lambda batch, seq_len: C.kv_cache_shape(cfg, batch, seq_len),
+        cache_spec=lambda policy: C.kv_cache_spec(cfg, policy),
+    )
+
+
+def _ssm_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: ssm.init(key, cfg),
+        param_specs=lambda policy: ssm.param_specs(cfg, policy),
+        forward=lambda p, batch, policy: ssm.forward(p, batch, cfg, policy),
+        prefill=lambda p, batch, policy: ssm.prefill(p, batch, cfg, policy),
+        decode_step=lambda p, tok, cache, n, policy: ssm.decode_step(
+            p, tok, cache, n, cfg, policy
+        ),
+        cache_shape=lambda batch, seq_len: C.ssm_cache_shape(cfg, batch),
+        cache_spec=lambda policy: C.ssm_cache_spec(cfg, policy),
+    )
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: hybrid.init(key, cfg),
+        param_specs=lambda policy: hybrid.param_specs(cfg, policy),
+        forward=lambda p, batch, policy: hybrid.forward(p, batch, cfg, policy),
+        prefill=lambda p, batch, policy: hybrid.prefill(p, batch, cfg, policy),
+        decode_step=lambda p, tok, cache, n, policy: hybrid.decode_step(
+            p, tok, cache, n, cfg, policy
+        ),
+        cache_shape=lambda batch, seq_len: C.hybrid_cache_shape(cfg, batch, seq_len),
+        cache_spec=lambda policy: C.hybrid_cache_spec(cfg, policy),
+    )
+
+
+# Whisper's encoder output length used by decode-shape caches: 30 s of audio
+# at 50 frames/s (the model card's 1500-frame receptive field).
+WHISPER_ENC_LEN = 1500
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelApi:
+    def forward(p, batch, policy):
+        return encdec.forward(p, batch["features"], batch["tokens"], cfg, policy)
+
+    def prefill(p, batch, policy):
+        return encdec.prefill(p, batch["features"], batch["tokens"], cfg, policy)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: encdec.init(key, cfg),
+        param_specs=lambda policy: encdec.param_specs(cfg, policy),
+        forward=forward,
+        prefill=prefill,
+        decode_step=lambda p, tok, cache, n, policy: encdec.decode_step(
+            p, tok, cache, n, cfg, policy
+        ),
+        cache_shape=lambda batch, seq_len: C.encdec_cache_shape(
+            cfg, batch, seq_len, WHISPER_ENC_LEN
+        ),
+        cache_spec=lambda policy: C.encdec_cache_spec(cfg, policy),
+    )
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return _transformer_api(cfg)
+    if cfg.family == "ssm":
+        return _ssm_api(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_api(cfg)
+    if cfg.family == "encdec":
+        return _encdec_api(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

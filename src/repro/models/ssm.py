@@ -1,0 +1,389 @@
+"""Mamba2 (state-space duality) blocks — the `ssm` family (arXiv:2405.21060).
+
+The SSD layer computes, per head h with scalar decay ``A_h < 0``:
+
+    s_t = exp(dt_t A) s_{t-1} + dt_t x_t ⊗ B_t          (state: P x N)
+    y_t = C_t · s_t + D x_t
+
+Training/prefill uses the **chunked SSD form**: within a chunk of length Q
+the recurrence is a masked-decay attention-like matmul (MXU-friendly);
+across chunks a short ``lax.scan`` carries the (H, P, N) state.  This is the
+pure-jnp oracle of ``repro.kernels.ssd_scan``.  Decode is the one-step
+recurrence against an :class:`~repro.models.cache.SSMCache`.
+
+Layout notes for TPU: heads shard over the model axis; B/C (state dim N) are
+small and replicated; the sequential inter-chunk scan has length S/Q so its
+serialisation cost is negligible next to the intra-chunk matmuls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.cache import SSMCache
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.policy import ShardingPolicy, shard_act
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# SSD core (chunked) + sequential reference
+# --------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)  positive step sizes
+    a: jax.Array,      # (H,)       negative decay rates
+    b_in: jax.Array,   # (B, S, N)
+    c_in: jax.Array,   # (B, S, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        s_pad = x.shape[1]
+    else:
+        s_pad = s
+    nc, q = s_pad // chunk, chunk
+
+    xf = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtf = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bf = b_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cf = c_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtf * a  # (B,nc,q,H), negative
+    da_cum = jnp.cumsum(da, axis=2)
+
+    # Intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    cb = jnp.einsum("bcqn,bckn->bcqk", cf, bf)                      # (B,nc,q,q)
+    decay = jnp.exp(da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((q, q), dtype=bool))
+    lmat = jnp.where(causal[None, None, :, :, None], decay, 0.0)    # (B,nc,q,k,H)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp", cb, lmat, dtf, xf)
+
+    # Chunk-final states: S_c = sum_j B_j ⊗ dt_j x_j exp(cum_Q - cum_j)
+    to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)                 # (B,nc,q,H)
+    s_chunk = jnp.einsum("bckn,bckh,bckh,bckhp->bchpn", bf, to_end, dtf, xf)
+
+    # Inter-chunk recurrence over nc chunks.
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                      # (B,nc,H)
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def step(hprev, xs):
+        s_c, dec = xs  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + s_c
+        return hnew, hprev
+
+    final, h_prevs = jax.lax.scan(
+        step,
+        h0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,P,N)
+
+    # Inter-chunk contribution: y_i += C_i · (h_prev) * exp(cum_i)
+    state_decay = jnp.exp(da_cum)                                   # (B,nc,q,H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cf, h_prevs, state_decay)
+
+    y = (y_intra + y_inter).reshape(bsz, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_sequential_ref(x, dt, a, b_in, c_in, init_state=None):
+    """Naive per-step recurrence (oracle for tests)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    st = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    ys = []
+    for t in range(s):
+        dec = jnp.exp(dt[:, t].astype(jnp.float32) * a)             # (B,H)
+        upd = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t].astype(jnp.float32),
+            x[:, t].astype(jnp.float32), b_in[:, t].astype(jnp.float32)
+        )
+        st = st * dec[:, :, None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", st, c_in[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), st
+
+
+def ssd_decode_step(state, x, dt, a, b_in, c_in):
+    """One-token recurrence.  state (B,H,P,N); x (B,H,P); dt (B,H); b/c (B,N)."""
+    dec = jnp.exp(dt.astype(jnp.float32) * a)
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn",
+        dt.astype(jnp.float32), x.astype(jnp.float32), b_in.astype(jnp.float32),
+    )
+    state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------
+# Causal depthwise conv (width ssm_conv_width) on (x, B, C)
+# --------------------------------------------------------------------------
+
+def causal_conv(u: jax.Array, kernel: jax.Array) -> jax.Array:
+    """u: (B, S, C); kernel: (W, C).  y[t] = sum_w k[w] u[t - W + 1 + w]."""
+    w = kernel.shape[0]
+    pad = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    s = u.shape[1]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(w):
+        out = out + kernel[i].astype(jnp.float32) * pad[:, i : i + s].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def causal_conv_step(cache: jax.Array, u_t: jax.Array, kernel: jax.Array):
+    """cache: (B, W-1, C) last inputs; u_t: (B, C).  Returns (y_t, new cache)."""
+    window = jnp.concatenate([cache, u_t[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), kernel.astype(jnp.float32))
+    return y.astype(u_t.dtype), window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def _in_proj(params: Params, u: jax.Array):
+    """Input projections with wz/wx fused (§Perf A2).
+
+    The two d_inner-sized projections are stacked on an UNSHARDED axis so
+    one matmul produces both: in backward, GSPMD emits ONE (B, S, D)
+    dx all-reduce for the pair instead of two.  The small B/C/dt heads stay
+    separate (wb/wc are replicated — their backward has no collective).
+    """
+    if "w_zx" in params:
+        zx = jnp.einsum("bsd,dkm->bskm", u, params["w_zx"])
+        z, xin = zx[:, :, 0], zx[:, :, 1]
+    else:  # legacy unfused checkpoints
+        z, xin = u @ params["wz"], u @ params["wx"]
+    b_in = u @ params["wb"]
+    c_in = u @ params["wc"]
+    dt_raw = u @ params["wdt"]
+    return z, xin, b_in, c_in, dt_raw
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.params_dtype()
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    kz, kx, kb, kc, kdt, kconv, ko, ka = jax.random.split(key, 8)
+    conv_dim = di + 2 * n
+    return {
+        "norm": L.init_rmsnorm(d, dtype),
+        "w_zx": jnp.stack(
+            [dense_init(kz, d, (di,), dtype), dense_init(kx, d, (di,), dtype)],
+            axis=1,
+        ),  # (D, 2, di): z and x projections fused (Perf A2)
+        "wb": dense_init(kb, d, (n,), dtype),
+        "wc": dense_init(kc, d, (n,), dtype),
+        "wdt": dense_init(kdt, d, (h,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32)
+        + jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            kdt, (h,), minval=math.log(1e-3), maxval=math.log(1e-1))))),
+        "a_log": jnp.log(
+            jax.random.uniform(ka, (h,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "conv": (jax.random.normal(kconv, (cfg.ssm_conv_width, conv_dim)) * 0.2).astype(dtype),
+        "gated_norm": L.init_rmsnorm(di, dtype),
+        "wo": dense_init(ko, di, (d,), dtype),
+    }
+
+
+def spec_mamba_block(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    m, f = policy.physical("model"), policy.physical("fsdp")
+    return {
+        "norm": L.spec_rmsnorm(),
+        "w_zx": P(f, None, m),
+        "wb": P(f, None),
+        "wc": P(f, None),
+        "wdt": P(f, m),
+        "dt_bias": P(None),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "conv": P(None, None),
+        "gated_norm": L.spec_rmsnorm(),
+        "wo": P(m, f),
+    }
+
+
+def mamba_block(
+    params: Params,
+    x: jax.Array,             # (B, S, D)
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (conv, state)
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Apply one Mamba2 block (pre-norm, residual outside).
+
+    Training/prefill: ``cache=None`` -> chunked SSD over the sequence.
+    Decode: ``cache=(conv_cache, ssd_state)`` and S == 1.
+    """
+    bsz, s, d = x.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+
+    u = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    z, xin, b_in, c_in, dt_raw = _in_proj(params, u)
+
+    conv_in = jnp.concatenate([xin, b_in, c_in], axis=-1)  # (B,S,di+2N)
+    new_cache = None
+    if cache is None:
+        conv_out = causal_conv(conv_in, params["conv"])
+        conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(conv_in.dtype)
+        xin, b_in, c_in = jnp.split(conv_out, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+        a = -jnp.exp(params["a_log"])
+        xh = xin.reshape(bsz, s, h, p)
+        xh = shard_act(xh, policy, "batch", None, "model", None)
+        y, _final = ssd_chunked(xh, dt, a, b_in, c_in, cfg.ssm_chunk)
+    else:
+        conv_cache, ssd_state = cache
+        conv_t, conv_cache = causal_conv_step(
+            conv_cache, conv_in[:, 0], params["conv"]
+        )
+        conv_t = jax.nn.silu(conv_t.astype(jnp.float32)).astype(conv_in.dtype)
+        xin1, b1, c1 = jnp.split(conv_t, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+        a = -jnp.exp(params["a_log"])
+        xh = xin1.reshape(bsz, h, p)
+        y1, ssd_state = ssd_decode_step(ssd_state, xh, dt, a, b1, c1)
+        y = y1[:, None]
+        xh = xh[:, None]
+        new_cache = (conv_cache, ssd_state)
+
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, s, di)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gated = L.rmsnorm(params["gated_norm"], gated, cfg.norm_eps)
+    out = gated @ params["wo"]
+    return shard_act(out, policy, "batch", None, None), new_cache
+
+
+# --------------------------------------------------------------------------
+# Full SSM model (mamba2-780m)
+# --------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_mamba_block(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "layers": layers,
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.params_dtype()),
+    }
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    layer = spec_mamba_block(cfg, policy)
+    stacked = jax.tree.map(
+        lambda sp: P(None, *tuple(sp)), layer, is_leaf=lambda v: isinstance(v, P)
+    )
+    return {
+        "embed": L.spec_embed(cfg, policy),
+        "layers": stacked,
+        "final_norm": L.spec_rmsnorm(),
+    }
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    use_chunked: bool = True,  # accepted for interface parity
+) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy)
+
+    def body(x, lp):
+        y, _ = mamba_block(lp, x, cfg, policy)
+        return x + y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg, policy)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(
+    params: Params, tokens: jax.Array, cfg: ModelConfig, policy: ShardingPolicy
+) -> Tuple[jax.Array, SSMCache]:
+    """Prompt pass returning final logits + SSM state caches per layer."""
+    bsz, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy)
+    w = cfg.ssm_conv_width
+
+    def body(x, lp):
+        # Re-derive the block's conv tail + final SSD state for the cache.
+        u = L.rmsnorm(lp["norm"], x, cfg.norm_eps)
+        z, xin0, b0, c0, dt_raw0 = _in_proj(lp, u)
+        conv_in = jnp.concatenate([xin0, b0, c0], axis=-1)
+        tail = conv_in[:, -(w - 1):, :]
+        conv_out = jax.nn.silu(
+            causal_conv(conv_in, lp["conv"]).astype(jnp.float32)
+        ).astype(conv_in.dtype)
+        di, n = cfg.ssm_d_inner, cfg.ssm_state
+        xin, b_in, c_in = jnp.split(conv_out, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw0.astype(jnp.float32) + lp["dt_bias"])
+        a = -jnp.exp(lp["a_log"])
+        xh = xin.reshape(bsz, s, cfg.ssm_n_heads, cfg.ssm_head_dim)
+        y, final_state = ssd_chunked(xh, dt, a, b_in, c_in, cfg.ssm_chunk)
+        y = y + lp["d_skip"][None, None, :, None].astype(y.dtype) * xh
+        y = y.reshape(bsz, s, di)
+        gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+        gated = L.rmsnorm(lp["gated_norm"], gated, cfg.norm_eps)
+        out = x + gated @ lp["wo"]
+        return out, (tail, final_state)
+
+    x, (tails, states) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg, policy)
+    return logits[:, 0], SSMCache(conv=tails, state=states)
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,
+    cache: SSMCache,
+    cache_len: jax.Array,  # unused (state is summary); kept for interface parity
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+) -> Tuple[jax.Array, SSMCache]:
+    x = L.embed_tokens(params["embed"], token[:, None], cfg, policy)
+
+    def body(x, xs):
+        lp, conv_c, state_c = xs
+        y, new_cache = mamba_block(lp, x, cfg, policy, cache=(conv_c, state_c))
+        return x + y, new_cache
+
+    x, (convs, states) = jax.lax.scan(body, x, (params["layers"], cache.conv, cache.state))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg, policy)
+    return logits[:, 0], SSMCache(conv=convs, state=states)

@@ -1,0 +1,4 @@
+"""Serving: the Antler multitask engine + batched LM prefill/decode."""
+from repro.serving.engine import (
+    LMServer, MultitaskEngine, MultitaskRequest, MultitaskResponse,
+)

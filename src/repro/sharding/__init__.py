@@ -1,0 +1,11 @@
+"""Sharding policies: logical-axis -> mesh-axis mapping, activation
+constraints, and parameter PartitionSpec trees."""
+
+from repro.sharding.policy import (
+    ShardingPolicy,
+    TP_POLICY,
+    FSDP_TP_POLICY,
+    shard_act,
+)
+
+__all__ = ["ShardingPolicy", "TP_POLICY", "FSDP_TP_POLICY", "shard_act"]

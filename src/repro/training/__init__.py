@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, train step, checkpointing."""
+from repro.training.optimizer import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update, lr_at, sgd_update,
+    clip_by_global_norm, global_norm,
+)
+from repro.training.train_loop import (
+    TrainState, cross_entropy_chunked, init_train_state, lm_loss, make_train_step,
+)
+from repro.training.checkpoint import (
+    latest_checkpoint, restore_checkpoint, save_checkpoint,
+)

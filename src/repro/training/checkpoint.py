@@ -1,0 +1,80 @@
+"""Checkpointing: pytree <-> .npz with path-string keys.
+
+Simple, dependency-free, and adequate for the framework's scale of local
+experiments: every leaf is saved under its joined tree path; restore
+rebuilds into a reference pytree (structure must match).  Handles the
+optimizer state and step counter as part of the same tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    """Atomically write ``tree`` to ``path`` (.npz)."""
+    flat = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_key(p)] = np.asarray(jax.device_get(leaf))
+    flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore_checkpoint(path: str, reference: Any) -> tuple[Any, int]:
+    """Load into the structure of ``reference``.  Returns (tree, step)."""
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    step = int(arrays.pop("__step__", np.asarray(0)))
+    paths_leaves = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for p, ref_leaf in paths_leaves[0]:
+        key = _path_key(p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint {path} is missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(ref_leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs ref {ref_leaf.shape}"
+            )
+        leaves.append(jax.numpy.asarray(arr, dtype=ref_leaf.dtype))
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves), step
+
+
+def latest_checkpoint(directory: str, prefix: str = "ckpt_") -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = re.match(rf"{re.escape(prefix)}(\d+)\.npz$", name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, name), int(m.group(1))
+    return best

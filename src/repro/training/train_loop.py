@@ -1,0 +1,152 @@
+"""Training step and loss for the architecture zoo.
+
+The cross-entropy is computed in sequence chunks (``cfg.loss_chunk``) with
+the softmax statistics in fp32: with the vocabulary sharded over the model
+axis the live loss buffer per device is O(B * chunk * V / model_parallel),
+never the full (B, S, V) fp32 tensor — required for the 256k-vocab archs to
+fit HBM at 4k train sequence length (§Perf records the ablation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+from repro.sharding.policy import ShardingPolicy
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+Params = Any
+
+
+def cross_entropy_chunked(
+    logits: jax.Array,   # (B, S, V) any float dtype
+    labels: jax.Array,   # (B, S) int
+    mask: Optional[jax.Array] = None,  # (B, S) 1/0
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean next-token NLL, computed chunk-by-chunk along the sequence."""
+    b, s, v = logits.shape
+    if s % chunk != 0:
+        chunk = s  # fall back to a single chunk for ragged tiny inputs
+    nc = s // chunk
+    lg = logits.reshape(b, nc, chunk, v)
+    lb = labels.reshape(b, nc, chunk)
+    mk = (
+        mask.reshape(b, nc, chunk)
+        if mask is not None
+        else jnp.ones((b, nc, chunk), jnp.float32)
+    )
+
+    def body(carry, xs):
+        tot, cnt = carry
+        lg_c, lb_c, mk_c = xs  # (B, chunk, V), (B, chunk), (B, chunk)
+        lg32 = lg_c.astype(jnp.float32)
+        m = jax.scipy.special.logsumexp(lg32, axis=-1)
+        tgt = jnp.take_along_axis(lg32, lb_c[..., None], axis=-1)[..., 0]
+        nll = (m - tgt) * mk_c
+        return (tot + nll.sum(), cnt + mk_c.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (lg.transpose(1, 0, 2, 3), lb.transpose(1, 0, 2), mk.transpose(1, 0, 2)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(
+    model: ModelApi,
+    params: Params,
+    batch: Any,
+    policy: ShardingPolicy,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token LM loss (teacher-forced).  ``batch``: tokens (B, S) or the
+    encdec dict; loss predicts tokens[1:] from tokens[:-1]."""
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        tokens = batch["tokens"]
+        logits, aux = model.forward(params, batch, policy)
+    else:
+        tokens = batch
+        logits, aux = model.forward(params, tokens, policy)
+    ce = cross_entropy_chunked(
+        logits[:, :-1], tokens[:, 1:], chunk=cfg.loss_chunk
+    )
+    loss = ce + cfg.moe_aux_loss_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: AdamWState
+
+
+def make_train_step(
+    model: ModelApi,
+    opt_cfg: AdamWConfig,
+    policy: ShardingPolicy,
+    grad_accum: int = 1,
+) -> Callable:
+    """Build the (jit-able) train step: grads -> clip -> AdamW -> metrics.
+
+    With ``grad_accum > 1`` the batch's leading axis is split into that many
+    microbatches and gradients accumulate under a ``lax.scan`` — the
+    launcher-level knob that fits large-arch training into per-chip HBM
+    (live activations scale with the microbatch, not the global batch).
+    """
+
+    def grads_of(params: Params, batch: Any):
+        def loss_fn(p):
+            loss, parts = lm_loss(model, p, batch, policy)
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, parts, grads
+
+    def train_step(params: Params, opt: AdamWState, batch: Any):
+        if grad_accum == 1:
+            loss, parts, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % grad_accum == 0, (
+                    f"batch {b} not divisible by grad_accum {grad_accum}"
+                )
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, mb):
+                g_acc, l_acc, a_acc = acc
+                loss, parts, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                    g_acc, grads,
+                )
+                return (g_acc, l_acc + loss / grad_accum,
+                        a_acc + parts["aux"] / grad_accum), None
+
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                micro,
+            )
+            parts = {"ce": loss, "aux": aux}
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, opt, params)
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(model: ModelApi, key: jax.Array) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params))

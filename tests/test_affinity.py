@@ -1,0 +1,65 @@
+"""Unit tests for the affinity computation (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affinity import (
+    _rankdata, affinity_matrix, pairwise_pearson_dissimilarity, profile_task,
+    spearman,
+)
+
+
+def test_pearson_dissimilarity_perfect_correlation():
+    x = jnp.array([[1.0, 2.0, 3.0], [2.0, 4.0, 6.0], [-1.0, -2.0, -3.0]])
+    d = pairwise_pearson_dissimilarity(x)
+    # rows 0,1 perfectly correlated -> dissimilarity 0; row 2 anti -> 2.
+    np.testing.assert_allclose(float(d[0, 1]), 0.0, atol=1e-5)
+    np.testing.assert_allclose(float(d[0, 2]), 2.0, atol=1e-5)
+    np.testing.assert_allclose(np.diag(np.asarray(d)), 0.0, atol=1e-5)
+
+
+def test_pearson_symmetry_and_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (10, 32))
+    d = np.asarray(pairwise_pearson_dissimilarity(x))
+    np.testing.assert_allclose(d, d.T, atol=1e-5)
+    assert (d >= -1e-5).all() and (d <= 2 + 1e-5).all()
+
+
+def test_rankdata_no_ties_matches_argsort():
+    x = jnp.array([3.0, 1.0, 2.0, 10.0, -5.0])
+    r = np.asarray(_rankdata(x))
+    expected = np.empty(5)
+    expected[np.argsort(np.asarray(x))] = np.arange(1, 6)
+    np.testing.assert_allclose(r, expected)
+
+
+def test_rankdata_ties_average():
+    x = jnp.array([1.0, 2.0, 2.0, 3.0])
+    r = np.asarray(_rankdata(x))
+    np.testing.assert_allclose(r, [1.0, 2.5, 2.5, 4.0])
+
+
+def test_spearman_monotone_invariance():
+    key = jax.random.PRNGKey(1)
+    a = jax.random.normal(key, (50,))
+    b = jnp.exp(a)  # monotone transform -> Spearman == 1
+    np.testing.assert_allclose(float(spearman(a, b)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(float(spearman(a, -b)), -1.0, atol=1e-5)
+
+
+def test_affinity_matrix_identical_tasks():
+    reps = [jax.random.normal(jax.random.PRNGKey(2), (8, 16)) for _ in range(2)]
+    prof = profile_task(reps)
+    s = affinity_matrix([prof, prof, prof])
+    assert s.shape == (2, 3, 3)
+    # identical profiles -> affinity 1 everywhere
+    np.testing.assert_allclose(np.asarray(s), 1.0, atol=1e-4)
+
+
+def test_affinity_symmetric():
+    profs = [
+        profile_task([jax.random.normal(jax.random.PRNGKey(i), (6, 12))])
+        for i in range(4)
+    ]
+    s = np.asarray(affinity_matrix(profs))
+    np.testing.assert_allclose(s, s.transpose(0, 2, 1), atol=1e-4)

@@ -1,0 +1,100 @@
+"""Block-cached executor vs cost model, Vanilla baseline, runtime gates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BlockCost, GraphCostModel, MSP430, MultitaskProgram, TaskGraphExecutor,
+    VanillaExecutor, optimal_order,
+)
+from repro.core.task_graph import TaskGraph
+
+
+def _program(graph, dim=8, seed=0):
+    rng = np.random.default_rng(seed)
+    costs = [BlockCost(weight_bytes=100.0 * (d + 1), flops=10.0 * (d + 1))
+             for d in range(graph.depth)]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)), jnp.float32)
+        for node in graph.nodes()
+    }
+    heads = [lambda p, x: x @ p] * graph.num_tasks
+    head_params = [
+        jnp.asarray(rng.normal(size=(dim, 3)), jnp.float32)
+        for _ in range(graph.num_tasks)
+    ]
+    return MultitaskProgram(
+        graph, [block] * graph.depth, node_params, heads, head_params, costs
+    )
+
+
+GRAPH = TaskGraph.from_groups([
+    [[0, 1, 2, 3]],
+    [[0, 1], [2, 3]],
+    [[0], [1], [2, 3]],
+])
+
+
+def test_stats_match_cost_model_prediction():
+    prog = _program(GRAPH)
+    ex = TaskGraphExecutor(prog)
+    x = jnp.ones((2, 8))
+    cm = GraphCostModel(GRAPH, prog.block_costs, MSP430)
+    for order in ([0, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]):
+        ex.reset()
+        _, stats = ex.run(x, order)
+        pred = cm.predicted_stats(order)
+        assert stats.blocks_executed == pred.blocks_executed
+        assert stats.blocks_skipped == pred.blocks_skipped
+        assert np.isclose(stats.weight_bytes_loaded, pred.weight_bytes_loaded)
+        assert np.isclose(stats.flops_executed, pred.flops_executed)
+
+
+def test_outputs_order_independent():
+    prog = _program(GRAPH)
+    ex = TaskGraphExecutor(prog)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    out_a, _ = ex.run(x, [0, 1, 2, 3])
+    ex.reset()
+    out_b, _ = ex.run(x, [3, 1, 0, 2])
+    for t in range(4):
+        np.testing.assert_allclose(
+            np.asarray(out_a[t]), np.asarray(out_b[t]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_vanilla_never_cheaper():
+    prog = _program(GRAPH)
+    x = jnp.ones((2, 8))
+    order = list(optimal_order(
+        GraphCostModel(GRAPH, prog.block_costs, MSP430).cost_matrix()
+    ).order)
+    _, s_ant = TaskGraphExecutor(prog).run(x, order)
+    _, s_van = VanillaExecutor(prog).run(x, order)
+    assert s_van.seconds(MSP430) >= s_ant.seconds(MSP430)
+    assert s_van.blocks_executed > s_ant.blocks_executed
+    assert s_ant.blocks_skipped > 0
+
+
+def test_runtime_gate_skips_dependents():
+    prog = _program(GRAPH)
+    ex = TaskGraphExecutor(prog)
+    x = jnp.ones((2, 8))
+
+    def gate(task, outputs):
+        return task == 0 or 0 in outputs  # everything depends on task 0
+
+    out, stats = ex.run(x, [0, 1, 2, 3], gate)
+    assert set(out) == {0, 1, 2, 3}
+    ex.reset()
+
+    def gate_none(task, outputs):
+        return task == 0  # others never run
+
+    out2, stats2 = ex.run(x, [0, 1, 2, 3], gate_none)
+    assert set(out2) == {0}
+    assert stats2.tasks_skipped == 3

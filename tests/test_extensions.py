@@ -1,0 +1,94 @@
+"""Tests for the extension layer: profiler, grad accumulation, continuous
+batching, and the Fig-15 deployment benchmark pieces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MSP430, GraphCostModel, TaskGraph, optimal_order
+from repro.core.profiler import profile_program_blocks
+from repro.models import get_model, make_config
+from repro.models.multitask import build_cnn_program
+from repro.serving.batching import ContinuousBatcher, GenRequest
+from repro.sharding.policy import TP_POLICY
+from repro.training import AdamWConfig, adamw_init, make_train_step
+
+
+def _tiny_cfg(**kw):
+    base = dict(
+        name="tiny", family="dense", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+        param_dtype="float32", remat=False, attn_chunk=32, loss_chunk=16,
+    )
+    base.update(kw)
+    return make_config(**base)
+
+
+def test_profiler_produces_consistent_costs():
+    graph = TaskGraph.from_groups([
+        [[0, 1]], [[0, 1]], [[0], [1]], [[0], [1]],
+    ])
+    prog = build_cnn_program(jax.random.PRNGKey(0), graph, [4, 4])
+    x = jnp.ones((4, 28, 28, 1))
+    costs = profile_program_blocks(prog, x, MSP430)
+    assert len(costs) == graph.depth
+    for c in costs:
+        assert c.weight_bytes > 0 and c.flops > 0
+    # measured costs feed the same ordering machinery
+    cm = GraphCostModel(graph, costs, MSP430)
+    r = optimal_order(cm.cost_matrix())
+    assert sorted(r.order) == [0, 1]
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = _tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 256)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                          schedule="constant", clip_norm=None)
+    step1 = jax.jit(make_train_step(model, opt_cfg, TP_POLICY, grad_accum=1))
+    step4 = jax.jit(make_train_step(model, opt_cfg, TP_POLICY, grad_accum=4))
+    p1, _, m1 = step1(params, adamw_init(params), batch)
+    p4, _, m4 = step4(params, adamw_init(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5
+        )
+
+
+def test_continuous_batcher_serves_mixed_requests():
+    cfg = _tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    cb = ContinuousBatcher(model, params, slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for uid in range(5):
+        cb.submit(GenRequest(
+            uid=uid,
+            prompt=rng.integers(0, 256, size=4 + uid).astype(np.int32),
+            max_new_tokens=3 + (uid % 3),
+        ))
+    results = cb.run()
+    assert len(results) == 5
+    assert sorted(r.uid for r in results) == list(range(5))
+    for r in results:
+        assert 1 <= r.steps <= 5
+        assert r.tokens.shape[0] == r.steps
+
+
+def test_fig15_constraints_behave():
+    from benchmarks.fig15_deployment import run as fig15_run
+    import io, contextlib
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        fig15_run()
+    rows = [l for l in buf.getvalue().splitlines() if l.startswith("fig15/")]
+    assert len(rows) == 4
+    for row in rows:
+        derived = row.split(",", 2)[2]
+        kv = dict(item.split("=") for item in derived.split(";"))
+        # conditional constraints can only lower expected cost
+        assert kv["cc_cheaper"] == "True"
+        assert float(kv["reduction"].rstrip("x")) > 1.0

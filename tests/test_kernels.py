@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pearson_affinity import pearson_dissimilarity
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@pytest.mark.parametrize("s,t,d", [(32, 32, 16), (70, 70, 32), (48, 96, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 24)])
+def test_flash_attention_sweep(s, t, d, dtype, causal, window):
+    if not causal and s != t:
+        pytest.skip("cross-attention ref only tested square here")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    ks = jax.random.split(jax.random.PRNGKey(s * t + d), 3)
+    q = jax.random.normal(ks[0], (2, s, d), dtype)
+    k = jax.random.normal(ks[1], (2, t, d), dtype)
+    v = jax.random.normal(ks[2], (2, t, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, q_blk=16, kv_blk=16)
+    ref = R.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("hq,hk", [(4, 4), (8, 2), (6, 1)])
+def test_flash_attention_gqa_vs_model_oracle(hq, hk):
+    from repro.models.layers import attention_dense
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 33, hq, 16))
+    k = jax.random.normal(ks[1], (2, 33, hk, 16))
+    v = jax.random.normal(ks[2], (2, 33, hk, 16))
+    out = ops.flash_attention_bhsd(q, k, v, q_blk=16, kv_blk=16)
+    pos = jnp.arange(33)
+    ref = attention_dense(q, k, v, pos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("k,f", [(16, 64), (37, 100), (64, 300)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pearson_sweep(k, f, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(k), (k, f), dtype)
+    out = ops.pairwise_pearson_dissimilarity(x, blk_k=16, blk_f=32)
+    z = x.astype(jnp.float32)
+    z = z - z.mean(-1, keepdims=True)
+    z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+    ref = R.pearson_dissimilarity_ref(z)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [
+    (24, 2, 4, 8, 8), (50, 3, 8, 4, 16), (64, 4, 16, 16, 32),
+])
+def test_ssd_scan_sweep(s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    x = jax.random.normal(ks[0], (2, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (2, s, n))
+    cc = jax.random.normal(ks[4], (2, s, n))
+    y, fin = ssd_scan(x, dt, a, bb, cc, chunk=chunk)
+    y_seq, fin_seq = R.ssd_sequential(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_seq), atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_chunked_ref_matches_sequential_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    x = jax.random.normal(ks[0], (1, 32, 2, 4), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 32, 2))).astype(jnp.bfloat16)
+    a = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    bb = jax.random.normal(ks[3], (1, 32, 4), jnp.bfloat16)
+    cc = jax.random.normal(ks[4], (1, 32, 4), jnp.bfloat16)
+    y, _ = R.ssd_scan_ref(x, dt, a, bb, cc, chunk=8)
+    y2, _ = R.ssd_sequential(x, dt, a, bb, cc)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y2, np.float32), atol=5e-2, rtol=5e-2
+    )

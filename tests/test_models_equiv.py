@@ -1,0 +1,149 @@
+"""Model-family equivalences: chunked==dense attention, SSD==sequential,
+forward == prefill+decode at every step, SWA ring-cache correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import make_config
+from repro.models import transformer as T
+from repro.models import ssm as S
+from repro.models import hybrid as H
+from repro.models import encdec as E
+from repro.models.cache import EncDecCache, HybridCache, KVCache
+from repro.sharding.policy import TP_POLICY
+
+P = TP_POLICY
+
+
+def _dense_cfg(**kw):
+    base = dict(
+        name="t", family="dense", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=300, dtype="float32",
+        param_dtype="float32", remat=False, attn_chunk=16, loss_chunk=32,
+    )
+    base.update(kw)
+    return make_config(**base)
+
+
+def test_chunked_equals_dense_attention_model_level():
+    cfg = _dense_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 0, 300)
+    a, _ = T.forward(params, toks, cfg, P, use_chunked=True)
+    b, _ = T.forward(params, toks, cfg, P, use_chunked=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4, rtol=3e-4)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_dense_decode_matches_forward(window):
+    cfg = _dense_cfg(sliding_window=window)
+    params = T.init(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 44), 0, 300)
+    full, _ = T.forward(params, toks, cfg, P)
+    last, cache = T.prefill(params, toks[:, :40], cfg, P)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[:, 39]), atol=3e-3, rtol=3e-3
+    )
+    if window is None:  # grow linear cache for extra steps
+        k = jnp.zeros((2, 2, 44, 2, 16))
+        v = jnp.zeros_like(k)
+        cache = KVCache(
+            k=k.at[:, :, :40].set(cache.k), v=v.at[:, :, :40].set(cache.v)
+        )
+    cl = jnp.asarray(40)
+    for t in range(40, 44):
+        step, cache = T.decode_step(params, toks[:, t], cache, cl, cfg, P)
+        np.testing.assert_allclose(
+            np.asarray(step), np.asarray(full[:, t]), atol=3e-3, rtol=3e-3
+        )
+        cl = cl + 1
+
+
+def test_moe_decode_matches_forward():
+    cfg = make_config(
+        name="m", family="moe", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=0, vocab_size=300, moe_num_experts=4, moe_top_k=2,
+        moe_num_shared_experts=1, moe_d_ff=96, moe_capacity_factor=8.0,
+        dtype="float32", param_dtype="float32", remat=False, attn_chunk=16,
+    )
+    params = T.init(jax.random.PRNGKey(4), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 20), 0, 300)
+    full, _ = T.forward(params, toks, cfg, P)
+    last, cache = T.prefill(params, toks[:, :19], cfg, P)
+    k = jnp.zeros((2, 2, 20, 2, 16))
+    v = jnp.zeros_like(k)
+    cache = KVCache(k=k.at[:, :, :19].set(cache.k), v=v.at[:, :, :19].set(cache.v))
+    step, _ = T.decode_step(params, toks[:, 19], cache, jnp.asarray(19), cfg, P)
+    np.testing.assert_allclose(
+        np.asarray(step), np.asarray(full[:, 19]), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_ssm_decode_matches_forward():
+    cfg = make_config(
+        name="s", family="ssm", num_layers=2, d_model=32, n_heads=1,
+        n_kv_heads=1, d_ff=0, vocab_size=300, ssm_state=8, ssm_head_dim=8,
+        ssm_chunk=8, dtype="float32", param_dtype="float32", remat=False,
+    )
+    params = S.init(jax.random.PRNGKey(6), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 21), 0, 300)
+    full, _ = S.forward(params, toks, cfg, P)
+    last, cache = S.prefill(params, toks[:, :18], cfg, P)
+    cl = jnp.asarray(18)
+    for t in range(18, 21):
+        step, cache = S.decode_step(params, toks[:, t], cache, cl, cfg, P)
+        np.testing.assert_allclose(
+            np.asarray(step), np.asarray(full[:, t]), atol=3e-3, rtol=3e-3
+        )
+        cl = cl + 1
+
+
+def test_hybrid_decode_matches_forward():
+    cfg = make_config(
+        name="h", family="hybrid", num_layers=4, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=300, ssm_state=8, ssm_head_dim=8,
+        ssm_chunk=8, hybrid_attn_period=2, dtype="float32",
+        param_dtype="float32", remat=False, attn_chunk=8,
+    )
+    params = H.init(jax.random.PRNGKey(8), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 20), 0, 300)
+    full, _ = H.forward(params, toks, cfg, P)
+    last, cache = H.prefill(params, toks[:, :19], cfg, P)
+    k = jnp.zeros((2, 2, 20, 2, 8))
+    v = jnp.zeros_like(k)
+    cache = HybridCache(
+        ssm=cache.ssm,
+        kv=KVCache(k=k.at[:, :, :19].set(cache.kv.k), v=v.at[:, :, :19].set(cache.kv.v)),
+    )
+    step, _ = H.decode_step(params, toks[:, 19], cache, jnp.asarray(19), cfg, P)
+    np.testing.assert_allclose(
+        np.asarray(step), np.asarray(full[:, 19]), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_encdec_decode_matches_forward():
+    cfg = make_config(
+        name="e", family="encdec", num_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab_size=300, enc_layers=2, enc_inputs=16,
+        activation="gelu", dtype="float32", param_dtype="float32",
+        remat=False, attn_chunk=8,
+    )
+    params = E.init(jax.random.PRNGKey(10), cfg)
+    feats = jax.random.normal(jax.random.PRNGKey(11), (2, 24, 16))
+    toks = jax.random.randint(jax.random.PRNGKey(12), (2, 20), 0, 300)
+    full, _ = E.forward(params, feats, toks, cfg, P)
+    last, cache = E.prefill(params, feats, toks[:, :19], cfg, P)
+    k = jnp.zeros((2, 2, 20, 4, 8))
+    v = jnp.zeros_like(k)
+    cache = EncDecCache(
+        self_kv=KVCache(
+            k=k.at[:, :, :19].set(cache.self_kv.k),
+            v=v.at[:, :, :19].set(cache.self_kv.v),
+        ),
+        cross_k=cache.cross_k, cross_v=cache.cross_v,
+    )
+    step, _ = E.decode_step(params, toks[:, 19], cache, jnp.asarray(19), cfg, P)
+    np.testing.assert_allclose(
+        np.asarray(step), np.asarray(full[:, 19]), atol=3e-3, rtol=3e-3
+    )

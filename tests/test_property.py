@@ -1,0 +1,127 @@
+"""Hypothesis property tests over the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockCost, Constraints, GraphCostModel, MSP430, fitness, held_karp_order,
+    optimal_order,
+)
+from repro.core.task_graph import TaskGraph, enumerate_task_graphs, variety_score
+
+
+# ---------------------------------------------------------------- strategies
+
+@st.composite
+def task_graphs(draw):
+    n = draw(st.integers(2, 5))
+    d = draw(st.integers(1, 3))
+    graphs = enumerate_task_graphs(n, d)
+    idx = draw(st.integers(0, len(graphs) - 1))
+    return graphs[idx]
+
+
+@st.composite
+def cost_matrices(draw):
+    n = draw(st.integers(2, 6))
+    vals = draw(
+        st.lists(st.floats(0.1, 100.0), min_size=n * n, max_size=n * n)
+    )
+    c = np.array(vals).reshape(n, n)
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    return c
+
+
+@st.composite
+def affinities(draw):
+    n = draw(st.integers(2, 5))
+    d = draw(st.integers(1, 3))
+    vals = draw(st.lists(st.floats(-1.0, 1.0), min_size=d * n * n, max_size=d * n * n))
+    a = np.array(vals).reshape(d, n, n)
+    a = (a + a.transpose(0, 2, 1)) / 2
+    for k in range(d):
+        np.fill_diagonal(a[k], 1.0)
+    return a
+
+
+# ------------------------------------------------------------------- checks
+
+@settings(max_examples=40, deadline=None)
+@given(task_graphs())
+def test_graphs_always_valid_and_prefix_closed(g: TaskGraph):
+    g.validate()
+    for i in range(g.num_tasks):
+        for j in range(g.num_tasks):
+            s = g.shared_prefix_depth(i, j)
+            # prefix-closed: every depth below s is shared, s itself is not
+            for d in range(s):
+                assert g.group_of(d, i) == g.group_of(d, j)
+            if s < g.depth:
+                assert g.group_of(s, i) != g.group_of(s, j) or i == j
+
+
+@settings(max_examples=30, deadline=None)
+@given(task_graphs())
+def test_cost_matrix_symmetric_nonnegative(g: TaskGraph):
+    costs = [BlockCost(weight_bytes=10 * (d + 1), flops=5.0) for d in range(g.depth)]
+    c = GraphCostModel(g, costs, MSP430).cost_matrix()
+    assert np.allclose(c, c.T)
+    assert (c >= 0).all()
+    assert np.allclose(np.diag(c), 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(task_graphs())
+def test_predicted_stats_conserve_blocks(g: TaskGraph):
+    costs = [BlockCost(weight_bytes=1.0, flops=1.0) for _ in range(g.depth)]
+    cm = GraphCostModel(g, costs, MSP430)
+    order = list(range(g.num_tasks))
+    stats = cm.predicted_stats(order)
+    assert stats.blocks_executed + stats.blocks_skipped == g.num_tasks * g.depth
+    # executed blocks >= number of distinct nodes on the union of paths
+    assert stats.blocks_executed >= len(
+        {node for t in order for node in g.path(t)}
+    ) - g.depth + 1 if g.num_tasks else True
+
+
+@settings(max_examples=25, deadline=None)
+@given(cost_matrices())
+def test_optimal_never_worse_than_identity(c):
+    n = c.shape[0]
+    r = optimal_order(c)
+    assert r.cost <= fitness(list(range(n)), c) + 1e-9
+    assert sorted(r.order) == list(range(n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(cost_matrices(), st.integers(0, 10_000))
+def test_optimal_beats_random_perms(c, seed):
+    n = c.shape[0]
+    r = held_karp_order(c)
+    rng = np.random.default_rng(seed)
+    for _ in range(10):
+        perm = rng.permutation(n).tolist()
+        assert r.cost <= fitness(perm, c) + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(task_graphs(), affinities())
+def test_variety_nonnegative_and_bounded(g, aff):
+    if aff.shape[1] < g.num_tasks:
+        return  # mismatched draw; skip silently
+    a = aff[:, : g.num_tasks, : g.num_tasks]
+    v = variety_score(g, a)
+    assert v >= 0.0
+    # each branch node contributes at most max dissimilarity (2.0)
+    assert v <= 2.0 * g.depth + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(cost_matrices())
+def test_precedence_restricts_feasible_set(c):
+    n = c.shape[0]
+    cons = Constraints.make(n, precedence=[(0, n - 1)])
+    r_free = held_karp_order(c)
+    r_cons = held_karp_order(c, cons)
+    assert cons.is_valid_order(r_cons.order)
+    assert r_cons.cost >= r_free.cost - 1e-9

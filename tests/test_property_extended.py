@@ -1,0 +1,116 @@
+"""Extended hypothesis property tests: GA under random constraints,
+tradeoff-selection invariants, randomized decode equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockCost, Constraints, GAConfig, MSP430, genetic_order, held_karp_order,
+)
+from repro.core.tradeoff import select_task_graph
+from repro.models import make_config
+from repro.models import transformer as T
+from repro.models.cache import KVCache
+from repro.sharding.policy import TP_POLICY
+
+
+@st.composite
+def constrained_instance(draw):
+    n = draw(st.integers(3, 7))
+    vals = draw(st.lists(st.floats(0.5, 50.0), min_size=n * n, max_size=n * n))
+    c = np.array(vals).reshape(n, n)
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    # random DAG-consistent precedence edges
+    order = draw(st.permutations(list(range(n))))
+    n_edges = draw(st.integers(0, n - 1))
+    edges = []
+    for _ in range(n_edges):
+        i = draw(st.integers(0, n - 2))
+        j = draw(st.integers(i + 1, n - 1))
+        edges.append((order[i], order[j]))
+    # random conditional probabilities on a subset of the edges
+    conds = [
+        (i, j, draw(st.floats(0.1, 0.95)))
+        for (i, j) in edges[: draw(st.integers(0, len(edges)))]
+    ]
+    return c, Constraints.make(n, precedence=edges, conditional=conds)
+
+
+@settings(max_examples=20, deadline=None)
+@given(constrained_instance())
+def test_ga_always_valid_and_bounded(inst):
+    c, cons = inst
+    ga = genetic_order(c, cons, GAConfig(population=48, elite_pairs=12,
+                                         patience=10, max_rounds=60, seed=0))
+    assert cons.is_valid_order(ga.order)
+    exact = held_karp_order(c, cons)
+    assert ga.cost >= exact.cost - 1e-9          # exact is a lower bound
+    assert ga.cost <= exact.cost * 1.5 + 1e-9    # and GA is never far off
+
+
+@settings(max_examples=20, deadline=None)
+@given(constrained_instance())
+def test_conditional_probabilities_discount_cost(inst):
+    c, cons = inst
+    if not cons.conditional:
+        return
+    exact_cond = held_karp_order(c, cons)
+    # Dropping the probabilities (pure precedence) can only raise the
+    # optimal expected cost: every edge gets weight 1 instead of p <= 1.
+    pure = Constraints.make(
+        cons.num_tasks, precedence=list(cons.precedence)
+    )
+    exact_pure = held_karp_order(c, pure)
+    assert exact_cond.cost <= exact_pure.cost + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 10_000))
+def test_tradeoff_selected_is_pareto_feasible(n, seed):
+    rng = np.random.default_rng(seed)
+    aff = rng.uniform(0.3, 0.9, (2, n, n))
+    aff = (aff + aff.transpose(0, 2, 1)) / 2
+    for k in range(2):
+        np.fill_diagonal(aff[k], 1.0)
+    costs = [BlockCost(weight_bytes=100, flops=200) for _ in range(3)]
+    res = select_task_graph(n, 2, aff, costs, MSP430)
+    sel = res.selected
+    # no candidate strictly dominates the selection on (variety, cost, size)
+    for cand in res.candidates:
+        strictly_better = (
+            cand.variety < sel.variety - 1e-12
+            and cand.exec_cost < sel.exec_cost - 1e-12
+            and cand.storage_bytes < sel.storage_bytes - 1e-12
+        )
+        assert not strictly_better
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(8, 24), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_decode_equals_forward_random_lengths(prompt_len, extra, seed):
+    cfg = make_config(
+        name="t", family="dense", num_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=256, dtype="float32",
+        param_dtype="float32", remat=False, attn_chunk=8, loss_chunk=8,
+    )
+    key = jax.random.PRNGKey(seed % 1000)
+    params = T.init(key, cfg)
+    total = prompt_len + extra
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (1, total), 0, 256)
+    full, _ = T.forward(params, toks, cfg, TP_POLICY)
+    _, cache = T.prefill(params, toks[:, :prompt_len], cfg, TP_POLICY)
+    k = jnp.zeros((2, 1, total, 2, 8))
+    v = jnp.zeros_like(k)
+    cache = KVCache(
+        k=k.at[:, :, :prompt_len].set(cache.k),
+        v=v.at[:, :, :prompt_len].set(cache.v),
+    )
+    cl = jnp.asarray(prompt_len)
+    for t in range(prompt_len, total):
+        step, cache = T.decode_step(params, toks[:, t], cache, cl, cfg, TP_POLICY)
+        np.testing.assert_allclose(
+            np.asarray(step), np.asarray(full[:, t]), atol=5e-3, rtol=5e-3
+        )
+        cl = cl + 1

@@ -1,0 +1,83 @@
+"""Serving: LM greedy generation == argmax of teacher-forced forward;
+MultitaskEngine ordering, gating, and stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Constraints, TaskGraph
+from repro.core.types import MSP430
+from repro.models import get_model, make_config
+from repro.models.multitask import build_cnn_program
+from repro.serving import LMServer, MultitaskEngine, MultitaskRequest
+from repro.sharding.policy import TP_POLICY
+
+
+def test_lm_server_greedy_matches_teacher_forcing():
+    cfg = make_config(
+        name="tiny", family="dense", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32",
+        param_dtype="float32", remat=False, attn_chunk=16,
+    )
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128)
+    srv = LMServer(model, params, TP_POLICY)
+    gen = srv.generate(prompts, steps=6)
+    # Teacher-forced re-check: feeding prompt+gen reproduces gen greedily.
+    toks = jnp.concatenate([prompts, jnp.asarray(gen)], axis=1)
+    logits, _ = model.forward(params, toks, TP_POLICY)
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    for b in range(2):
+        for i in range(6):
+            assert greedy[b, 8 + i - 1] == gen[b, i]
+
+
+def _engine(gates=None, constraints=None, order=None):
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]],
+        [[0, 1], [2, 3]],
+        [[0, 1], [2, 3]],
+        [[0], [1], [2], [3]],
+    ])
+    prog = build_cnn_program(jax.random.PRNGKey(0), graph, [3] * 4)
+    return MultitaskEngine(prog, constraints=constraints, hw=MSP430,
+                           gates=gates, order=order)
+
+
+def test_engine_serves_all_tasks_and_counts():
+    eng = _engine()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    resp = eng.serve(MultitaskRequest(x=x))
+    assert set(resp.outputs) == {0, 1, 2, 3}
+    assert resp.stats.blocks_skipped > 0          # sharing was exploited
+    assert resp.predicted_seconds > 0
+
+
+def test_engine_respects_precedence_order():
+    cons = Constraints.make(4, precedence=[(3, 0)])
+    eng = _engine(constraints=cons)
+    assert eng.order.index(3) < eng.order.index(0)
+
+
+def test_engine_conditional_gate_skips():
+    # Task 0 is a presence detector; others run only if it fires class 0.
+    def dependent_gate(outputs):
+        return bool(jnp.argmax(outputs[0][0]) == 0)
+
+    gates = {t: dependent_gate for t in (1, 2, 3)}
+    eng = _engine(gates=gates, order=[0, 1, 2, 3])
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 28, 28, 1))
+    resp = eng.serve(MultitaskRequest(x=x))
+    fired = bool(jnp.argmax(resp.outputs[0][0]) == 0)
+    if fired:
+        assert set(resp.outputs) == {0, 1, 2, 3}
+    else:
+        assert set(resp.outputs) == {0}
+        assert resp.stats.tasks_skipped == 3
+
+
+def test_engine_task_subset_requests():
+    eng = _engine()
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 28, 28, 1))
+    resp = eng.serve(MultitaskRequest(x=x, tasks=[1, 2]))
+    assert set(resp.outputs) == {1, 2}

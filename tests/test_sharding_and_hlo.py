@@ -1,0 +1,108 @@
+"""Sharding utilities + the trip-count-aware HLO cost analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_cost import analyze_hlo
+from repro.sharding.policy import FSDP_TP_POLICY, TP_POLICY, shard_act
+from repro.sharding.utils import fit_spec, fit_specs, tree_bytes
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_fit_spec_drops_nondivisible():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # 1 KV head cannot shard over 16 -> replicated on that axis
+    assert fit_spec((64, 1, 128), P(None, "model", None), mesh) == P(None, None, None)
+    # 48 heads shard fine
+    assert fit_spec((64, 48, 128), P(None, "model", None), mesh) == P("model",) or \
+        fit_spec((64, 48, 128), P(None, "model", None), mesh) == P(None, "model", None)
+
+
+def test_fit_spec_tuple_prefix_fallback():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # batch 32 divides pod*data=32
+    assert fit_spec((32, 8), P(("pod", "data"), None), mesh) == P(("pod", "data"), None)
+    # batch 2 only divides the ("pod",) prefix
+    assert fit_spec((2, 8), P(("pod", "data"), None), mesh) == P(("pod",), None)
+    # batch 1 divides nothing
+    assert fit_spec((1, 8), P(("pod", "data"), None), mesh) == P(None, None)
+
+
+def test_fit_specs_tree():
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    shapes = {"a": jax.ShapeDtypeStruct((8, 12), jnp.float32),
+              "b": jax.ShapeDtypeStruct((3,), jnp.float32)}
+    specs = {"a": P("data", "model"), "b": P("model")}
+    out = fit_specs(shapes, specs, mesh)
+    assert out["a"] == P("data", "model")
+    assert out["b"] == P(None)
+
+
+def test_tree_bytes():
+    t = {"x": jax.ShapeDtypeStruct((10, 10), jnp.bfloat16),
+         "y": jax.ShapeDtypeStruct((5,), jnp.float32)}
+    assert tree_bytes(t) == 10 * 10 * 2 + 5 * 4
+
+
+def test_shard_act_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shard_act(x, TP_POLICY, "batch", "model")
+    assert y is x
+
+
+def test_policy_axis_resolution():
+    assert TP_POLICY.physical("batch") == ("pod", "data")
+    assert TP_POLICY.physical("fsdp") is None
+    assert FSDP_TP_POLICY.physical("fsdp") == "data"
+    with pytest.raises(ValueError):
+        TP_POLICY.physical("bogus")
+
+
+# ------------------------------------------------------------------ hlo cost
+
+def test_hlo_cost_multiplies_scan_trip_count():
+    def f_scan(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    def f_unroll(x, w):
+        for _ in range(7):
+            x = jnp.tanh(x @ w)
+        return x
+
+    sds = (jax.ShapeDtypeStruct((64, 64), jnp.float32),) * 2
+    a = analyze_hlo(jax.jit(f_scan).lower(*sds).compile().as_text())
+    b = analyze_hlo(jax.jit(f_unroll).lower(*sds).compile().as_text())
+    expected = 2 * 64**3 * 7
+    assert a["flops"] == expected
+    assert b["flops"] == expected
+
+
+def test_hlo_cost_counts_dot_flops_exactly():
+    def f(x, w):
+        return x @ w
+
+    sds = (jax.ShapeDtypeStruct((32, 48), jnp.float32),
+           jax.ShapeDtypeStruct((48, 16), jnp.float32))
+    a = analyze_hlo(jax.jit(f).lower(*sds).compile().as_text())
+    assert a["flops"] == 2 * 32 * 48 * 16
+
+
+def test_hlo_cost_bytes_positive_and_bounded():
+    def f(x):
+        return jnp.tanh(x) * 2.0
+
+    sds = (jax.ShapeDtypeStruct((256, 256), jnp.float32),)
+    a = analyze_hlo(jax.jit(f).lower(*sds).compile().as_text())
+    nbytes = 256 * 256 * 4
+    assert nbytes <= a["bytes"] <= 6 * nbytes  # in + out (+ copies)
+    assert a["collective_bytes"] == 0.0

@@ -1,0 +1,74 @@
+"""Task-graph structure, enumeration and variety score (paper §3)."""
+import numpy as np
+import pytest
+
+from repro.core.task_graph import (
+    TaskGraph, enumerate_task_graphs, variety_score,
+)
+
+
+def test_extreme_graphs():
+    g1 = TaskGraph.fully_shared(4, 3)
+    g2 = TaskGraph.fully_separate(4, 3)
+    g1.validate(); g2.validate()
+    assert g1.num_blocks() == 4           # one block per depth
+    assert g2.num_blocks() == 16          # 4 tasks x 4 depths
+    assert g1.shared_prefix_depth(0, 3) == 4
+    assert g2.shared_prefix_depth(0, 3) == 0
+
+
+def test_nesting_validation_rejects_bad_partitions():
+    with pytest.raises(ValueError):
+        TaskGraph.from_groups([
+            [[0, 1]],
+            [[0], [1]],
+            [[0, 1]],          # coarsens again -> not nested
+        ])
+
+
+def test_enumeration_small_counts():
+    # n=2, D=1: task 1 attaches at virtual root or under the depth-0 block.
+    assert len(enumerate_task_graphs(2, 1)) == 2
+    # n=2, D=2: share nothing / depth-0 only / depth-0 and depth-1.
+    assert len(enumerate_task_graphs(2, 2)) == 3
+    # growth is monotone in n and all graphs are valid + deduped
+    g4 = enumerate_task_graphs(4, 2)
+    assert len({g.partitions for g in g4}) == len(g4)
+
+
+def test_enumeration_beam_prunes():
+    aff = np.ones((3, 6, 6)) * 0.5
+    full = enumerate_task_graphs(5, 3)
+    beamed = enumerate_task_graphs(
+        5, 3, beam=50, variety_fn=lambda g: variety_score(g, aff)
+    )
+    assert len(beamed) <= 50 < len(full)
+
+
+def test_variety_extremes():
+    n, d = 4, 2
+    rng = np.random.default_rng(0)
+    aff = rng.uniform(0.2, 0.8, size=(d, n, n))
+    aff = (aff + aff.transpose(0, 2, 1)) / 2
+    for k in range(d):
+        np.fill_diagonal(aff[k], 1.0)
+    v_shared = variety_score(TaskGraph.fully_shared(n, d - 1), aff)
+    v_sep = variety_score(TaskGraph.fully_separate(n, d - 1), aff)
+    # Fig 2: all-shared graph has the highest variety; fully separate zero.
+    assert v_sep == 0.0
+    assert v_shared > 0.0
+    for g in enumerate_task_graphs(n, d - 1):
+        assert 0.0 <= variety_score(g, aff) <= v_shared + 1e-9
+
+
+def test_branch_nodes_and_children():
+    g = TaskGraph.from_groups([
+        [[0, 1, 2]],
+        [[0, 1], [2]],
+        [[0], [1], [2]],
+    ])
+    nodes = dict((tuple(n), True) for n in g.branch_nodes())
+    # depth-0 group (0,1,2) splits -> branch node; depth-1 (0,1) splits too.
+    assert (0, (0, 1, 2)) in nodes
+    assert (1, (0, 1)) in nodes
+    assert g.children_of(0, (0, 1, 2)) == [(0, 1), (2,)]

@@ -1,0 +1,88 @@
+"""Tradeoff selection (paper §3.2-3.3) and the synthetic data pipelines."""
+import numpy as np
+import pytest
+
+from repro.core import BlockCost, MSP430
+from repro.core.tradeoff import select_task_graph, tradeoff_curve
+from repro.core.task_graph import TaskGraph
+from repro.data import MultitaskDataset, lm_batches, train_test_split
+
+
+def _affinity(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.2, 0.9, (d, n, n))
+    a = (a + a.transpose(0, 2, 1)) / 2
+    for k in range(d):
+        np.fill_diagonal(a[k], 1.0)
+    return a
+
+
+def test_tradeoff_endpoints_and_selection():
+    n, bp = 4, 2
+    aff = _affinity(n, bp, seed=3)
+    costs = [BlockCost(weight_bytes=1000, flops=5000) for _ in range(bp + 1)]
+    res = select_task_graph(n, bp, aff, costs, MSP430)
+    sizes = np.array([c.storage_bytes for c in res.candidates])
+    varieties = np.array([c.variety for c in res.candidates])
+    # smallest graph is the fully-shared one; it has the max variety
+    smallest = res.candidates[int(np.argmin(sizes))]
+    assert smallest.variety == pytest.approx(max(varieties))
+    # largest graph (fully separate) has zero variety
+    biggest = res.candidates[int(np.argmax(sizes))]
+    assert biggest.variety == pytest.approx(0.0)
+    # the selected graph is neither extreme (for generic affinities)
+    assert min(sizes) <= res.selected.storage_bytes <= max(sizes)
+    # trend lines are normalised to [0, 1]
+    assert res.variety_trend.min() >= 0 and res.variety_trend.max() <= 1
+    assert res.cost_trend.min() >= 0 and res.cost_trend.max() <= 1
+    # variety trend decreases with budget; cost trend increases
+    assert res.variety_trend[0] >= res.variety_trend[-1]
+    assert res.cost_trend[0] <= res.cost_trend[-1]
+
+
+def test_tradeoff_respects_beam():
+    n, bp = 6, 3
+    aff = _affinity(n, bp, seed=5)
+    costs = [BlockCost(weight_bytes=100, flops=100) for _ in range(bp + 1)]
+    res = select_task_graph(n, bp, aff, costs, MSP430, beam=80)
+    assert len(res.candidates) <= 80
+
+
+def test_lm_batches_shapes_and_structure():
+    it = lm_batches(vocab_size=512, batch=4, seq_len=32, seed=0)
+    a = next(it)
+    b = next(it)
+    assert a.shape == (4, 32) and a.dtype == np.int32
+    assert (a >= 0).all() and (a < 512).all()
+    assert not np.array_equal(a, b)  # stream advances
+    # planted structure: repeated-context continuation entropy is limited;
+    # just assert determinism across seeds
+    it2 = lm_batches(vocab_size=512, batch=4, seq_len=32, seed=0)
+    np.testing.assert_array_equal(a, next(it2))
+
+
+def test_multitask_dataset_affinity_structure():
+    ds = MultitaskDataset(num_tasks=4, num_classes=5, num_factors=2, seed=0)
+    x, y = ds.sample(64)
+    assert x.shape == (64, 28, 28, 1)
+    assert y.shape == (4, 64)
+    # tasks sharing a factor have deterministically-related labels
+    f = ds.factor_of_task
+    same = [(i, j) for i in range(4) for j in range(i + 1, 4) if f[i] == f[j]]
+    for i, j in same:
+        # label_perm[i][z] and label_perm[j][z] are both functions of the
+        # same latent z -> mutual information is maximal (bijective map)
+        mapping = {}
+        consistent = True
+        for a_, b_ in zip(y[i], y[j]):
+            if a_ in mapping and mapping[a_] != b_:
+                consistent = False
+            mapping[a_] = b_
+        assert consistent
+
+
+def test_train_test_split_sizes():
+    ds = MultitaskDataset(num_tasks=3, num_classes=4, seed=1)
+    (xtr, ytr), (xte, yte) = train_test_split(ds, 100, 25)
+    assert xtr.shape[0] == 100 and xte.shape[0] == 25
+    assert ytr.shape == (3, 100) and yte.shape == (3, 25)

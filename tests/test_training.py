@@ -1,0 +1,84 @@
+"""Training substrate: loss decreases, chunked CE correctness, checkpoints,
+optimizer behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import lm_batches
+from repro.models import get_model, make_config
+from repro.sharding.policy import TP_POLICY
+from repro.training import (
+    AdamWConfig, adamw_init, adamw_update, cross_entropy_chunked, lr_at,
+    make_train_step, restore_checkpoint, save_checkpoint,
+)
+
+
+def _tiny_cfg():
+    return make_config(
+        name="tiny", family="dense", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=512, dtype="float32",
+        param_dtype="float32", remat=False, attn_chunk=32, loss_chunk=16,
+    )
+
+
+def test_chunked_ce_matches_dense():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 64, 37))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 37)
+    ce = cross_entropy_chunked(logits, labels, chunk=16)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ref = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+    np.testing.assert_allclose(float(ce), float(ref), rtol=1e-5)
+
+
+def test_loss_decreases_over_steps():
+    cfg = _tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        model, AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=100), TP_POLICY
+    ))
+    it = lm_batches(cfg.vocab_size, batch=8, seq_len=64, seed=0)
+    losses = []
+    for _ in range(40):
+        params, opt, m = step(params, opt, jnp.asarray(next(it)))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2
+    assert np.isfinite(losses).all()
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(lr_at(cfg, jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(lr_at(cfg, jnp.asarray(100))) <= 0.1 + 1e-6
+    # monotone decay after warmup
+    vals = [float(lr_at(cfg, jnp.asarray(s))) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_adamw_moves_params_and_decays_weights():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    grads = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    st = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=0,
+                      total_steps=10, schedule="constant", clip_norm=None)
+    new, st2, _ = adamw_update(cfg, grads, st, params)
+    # zero grads: matrices shrink via decoupled decay, vectors untouched
+    assert float(new["w"][0, 0]) < 1.0
+    np.testing.assert_allclose(np.asarray(new["b"]), 0.0)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = _tiny_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    path = os.path.join(tmp_path, "ckpt_10.npz")
+    save_checkpoint(path, params, step=10)
+    restored, step = restore_checkpoint(path, params)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
