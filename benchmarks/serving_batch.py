@@ -1,0 +1,156 @@
+"""Batched multitask serving sweep: run_batch vs the sequential request loop.
+
+For batch sizes {1, 4, 16, 64} this benchmark serves B identical-subset
+requests two ways:
+
+* **sequential** — the pre-batching path: ``TaskGraphExecutor.run`` once per
+  request (executor reset between requests, as the engine does per serve);
+* **batched** — one ``TaskGraphExecutor.run_batch`` over the stacked group:
+  each depth-block is vmapped over the batch and every weight load is paid
+  once per group.
+
+Reported per batch size: per-request wall-clock latency for both paths, the
+speedup, and the block loads saved by amortisation
+(``(B - 1) x`` the single-request load bytes).  Every configuration also
+verifies the two acceptance invariants: batched outputs ``allclose`` (rtol
+1e-5) to the per-request path, and batched ``ExecutionStats`` exactly equal
+to ``GraphCostModel.predicted_stats(order, batch_size=B)``.
+
+``--dry-run`` shrinks sizes/iterations and skips the wall-clock speedup
+assertion (CI boxes have noisy clocks); the equivalence checks always run.
+
+Usage: ``PYTHONPATH=src python benchmarks/serving_batch.py [--dry-run]``
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serving_batch.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.common import emit, time_call
+from repro.core import (
+    BlockCost, GraphCostModel, MSP430, MultitaskProgram, TaskGraphExecutor,
+    optimal_order,
+)
+from repro.core.task_graph import TaskGraph
+
+GRAPH = TaskGraph.from_groups([
+    [[0, 1, 2, 3, 4, 5]],
+    [[0, 1, 2], [3, 4, 5]],
+    [[0, 1], [2], [3], [4, 5]],
+    [[0], [1], [2], [3], [4], [5]],
+])
+
+
+def build_program(dim: int, seed: int = 0) -> MultitaskProgram:
+    """Dense tanh blocks (one matmul per block) + linear heads."""
+    rng = np.random.default_rng(seed)
+    costs = [
+        BlockCost(weight_bytes=4.0 * dim * dim, flops=2.0 * dim * dim)
+        for _ in range(GRAPH.depth)
+    ]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)) / np.sqrt(dim), jnp.float32)
+        for node in GRAPH.nodes()
+    }
+    head_params = [
+        jnp.asarray(rng.normal(size=(dim, 8)), jnp.float32)
+        for _ in range(GRAPH.num_tasks)
+    ]
+    return MultitaskProgram(
+        graph=GRAPH,
+        block_fns=[block] * GRAPH.depth,
+        node_params=node_params,
+        head_fns=[lambda p, x: x @ p] * GRAPH.num_tasks,
+        head_params=head_params,
+        block_costs=costs,
+    )
+
+
+def run_sequential(ex: TaskGraphExecutor, xs: jnp.ndarray, order):
+    outs = []
+    for i in range(xs.shape[0]):
+        ex.reset()
+        o, s = ex.run(xs[i], order)
+        outs.append((o, s))
+    jax.block_until_ready([o for o, _ in outs])
+    return outs
+
+
+def run_batched(ex: TaskGraphExecutor, xs: jnp.ndarray, order):
+    ex.reset()
+    out, stats = ex.run_batch(xs, order)
+    jax.block_until_ready(out)
+    return out, stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes, 1 iteration, no wall-clock assertion")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="block width (default 256, dry-run 16)")
+    args = ap.parse_args(argv)
+
+    dim = args.dim or (16 if args.dry_run else 256)
+    batches = (1, 4) if args.dry_run else (1, 4, 16, 64)
+    iters = 1 if args.dry_run else 5
+
+    prog = build_program(dim)
+    cm = GraphCostModel(GRAPH, prog.block_costs, MSP430)
+    order = list(optimal_order(cm.cost_matrix()).order)
+    ex = TaskGraphExecutor(prog)
+    rng = np.random.default_rng(1)
+
+    print("name,us_per_call,derived")
+    speedups = {}
+    for b in batches:
+        xs = jnp.asarray(rng.normal(size=(b, dim)), jnp.float32)
+
+        # Correctness first: batched == per-request, stats == prediction.
+        out_b, stats_b = run_batched(ex, xs, order)
+        seq = run_sequential(ex, xs, order)
+        for t in order:
+            ref = np.stack([np.asarray(seq[i][0][t]) for i in range(b)])
+            np.testing.assert_allclose(
+                np.asarray(out_b[t]), ref, rtol=1e-5, atol=1e-6)
+        pred = cm.predicted_stats(order, batch_size=b)
+        assert stats_b == pred, (
+            f"batch={b}: executor stats diverge from cost model\n"
+            f"  got  {stats_b}\n  want {pred}")
+
+        t_seq = time_call(run_sequential, ex, xs, order, warmup=1, iters=iters)
+        t_bat = time_call(run_batched, ex, xs, order, warmup=1, iters=iters)
+        per_req_seq = t_seq / b
+        per_req_bat = t_bat / b
+        speedup = per_req_seq / per_req_bat
+        speedups[b] = speedup
+        seq_stats = cm.predicted_stats(order)
+        loads_saved = (b - 1) * seq_stats.weight_bytes_loaded
+        emit(f"serve_seq_b{b}", per_req_seq, f"per_request;batch={b}")
+        emit(f"serve_batch_b{b}", per_req_bat,
+             f"per_request;batch={b};speedup={speedup:.2f}x;"
+             f"weight_bytes_load_saved={loads_saved:.0f}")
+
+    if not args.dry_run and 16 in speedups:
+        if speedups[16] < 4.0:
+            print(f"FAIL: batch=16 per-request speedup {speedups[16]:.2f}x < 4x",
+                  file=sys.stderr)
+            return 1
+        print(f"# batch=16 per-request speedup: {speedups[16]:.2f}x (>= 4x)")
+    print("# equivalence + stats checks passed for batches", list(batches))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite must collect and pass, and the batched
+# serving benchmark must run its equivalence checks in --dry-run mode.
+# Catches collection regressions (like the seed's missing-hypothesis import
+# errors) before merge.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python benchmarks/serving_batch.py --dry-run

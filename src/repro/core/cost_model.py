@@ -103,10 +103,19 @@ class GraphCostModel:
         per_task = sum(bc.weight_bytes for bc in self.block_costs)
         return per_task * self.graph.num_tasks
 
-    def predicted_stats(self, order: Sequence[int]) -> ExecutionStats:
-        """Counter-level prediction the executor must match exactly."""
+    def predicted_stats(
+        self, order: Sequence[int], batch_size: int = 1
+    ) -> ExecutionStats:
+        """Counter-level prediction the executor must match exactly.
+
+        With ``batch_size > 1`` this predicts the *batched* executor
+        (``TaskGraphExecutor.run_batch`` on a cold executor serving
+        ``batch_size`` stacked requests): block invocations and weight loads
+        happen once per group (loads amortise across the batch), while flop
+        and task counters scale per request.  ``batch_size=1`` is the
+        original single-request prediction.
+        """
         stats = ExecutionStats()
-        cached_depth = -1
         prev: Optional[int] = None
         for t in order:
             shared = (
@@ -117,14 +126,13 @@ class GraphCostModel:
                 if d < shared:
                     stats.blocks_skipped += 1
                     stats.weight_bytes_skipped += bc.weight_bytes
-                    stats.flops_skipped += bc.flops
+                    stats.flops_skipped += batch_size * bc.flops
                 else:
                     stats.blocks_executed += 1
                     stats.weight_bytes_loaded += bc.weight_bytes
-                    stats.flops_executed += bc.flops
-            stats.tasks_run += 1
+                    stats.flops_executed += batch_size * bc.flops
+            stats.tasks_run += batch_size
             prev = t
-        del cached_depth
         return stats
 
 

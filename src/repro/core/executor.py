@@ -23,6 +23,12 @@ same "compile per suffix" structure a production serving stack would use.
 
 ``ExecutionStats`` counters must match ``GraphCostModel.predicted_stats``
 exactly; a property test asserts this for random graphs and orders.
+
+Request *groups* execute through :meth:`TaskGraphExecutor.run_batch`: the
+same residency/prefix-reuse logic, but every block is vmapped over a stacked
+batch of requests so one weight load (and one block invocation) serves the
+whole group.  The batched counters match
+``GraphCostModel.predicted_stats(order, batch_size=B)``.
 """
 from __future__ import annotations
 
@@ -78,6 +84,8 @@ class TaskGraphExecutor:
         self._jit = jit_blocks
         self._compiled: Dict[int, Callable] = {}
         self._compiled_heads: Dict[int, Callable] = {}
+        self._compiled_batch: Dict[int, Callable] = {}
+        self._compiled_heads_batch: Dict[int, Callable] = {}
         self.reset()
 
     # ---------------------------------------------------------------- state
@@ -85,8 +93,29 @@ class TaskGraphExecutor:
         """Cold state: nothing resident, nothing cached."""
         depth = self.program.graph.depth
         self._resident: List[Optional[NodeId]] = [None] * depth
+        self.clear_activations()
+
+    def clear_activations(self) -> None:
+        """Drop cached activations but keep weight residency.
+
+        Weights are input-independent, activations are not: the whole-order
+        entry points (:meth:`run` / :meth:`run_batch`) call this on entry so
+        a new input can never resume from a previous input's activations,
+        while the resident blocks remain loaded.  Callers driving
+        :meth:`run_task` / :meth:`run_task_batch` directly own this contract
+        themselves (the serving engine resets per group).
+        """
+        depth = self.program.graph.depth
         self._activations: List[Optional[jnp.ndarray]] = [None] * depth
         self._act_owner: List[Optional[NodeId]] = [None] * depth
+        self._act_shape: Optional[Tuple[int, ...]] = None
+
+    def _guard_act_shape(self, shape: Tuple[int, ...]) -> None:
+        """Invalidate cached activations produced for a different input shape
+        (e.g. switching between the single-request and batched paths)."""
+        if self._act_shape is not None and self._act_shape != shape:
+            self.clear_activations()
+        self._act_shape = shape
 
     def _block_fn(self, depth: int) -> Callable:
         if depth not in self._compiled:
@@ -100,13 +129,42 @@ class TaskGraphExecutor:
             self._compiled_heads[task] = jax.jit(fn) if self._jit else fn
         return self._compiled_heads[task]
 
+    def _block_fn_batch(self, depth: int) -> Callable:
+        # vmap over the stacked request axis; params are shared across the
+        # batch.  jit's shape-keyed cache yields one compile per
+        # (depth, batch-shape) — exactly the recompilation budget the
+        # request-group scheduler's padded shapes bound.
+        if depth not in self._compiled_batch:
+            fn = jax.vmap(self.program.block_fns[depth], in_axes=(None, 0))
+            self._compiled_batch[depth] = jax.jit(fn) if self._jit else fn
+        return self._compiled_batch[depth]
+
+    def _head_fn_batch(self, task: int) -> Callable:
+        if task not in self._compiled_heads_batch:
+            fn = jax.vmap(self.program.head_fns[task], in_axes=(None, 0))
+            self._compiled_heads_batch[task] = jax.jit(fn) if self._jit else fn
+        return self._compiled_heads_batch[task]
+
     # ------------------------------------------------------------------ run
-    def run_task(
-        self, task: int, x: jnp.ndarray, stats: ExecutionStats
+    def _run_task_impl(
+        self,
+        task: int,
+        x: jnp.ndarray,
+        stats: ExecutionStats,
+        weight: int,
+        block_fn: Callable[[int], Callable],
+        head_fn: Callable[[int], Callable],
     ) -> jnp.ndarray:
-        """Run one task, resuming from the deepest cached shared block."""
+        """Shared body of the single-request and batched task execution.
+
+        The residency/resume/accounting invariants live ONLY here so the two
+        paths cannot drift: ``weight`` is the logical request multiplicity
+        scaling the per-request counters (flops/tasks), while load counters
+        stay physical (once per invocation).
+        """
         graph = self.program.graph
         path = graph.path(task)
+        self._guard_act_shape(tuple(x.shape))
 
         # Deepest prefix of this task's path whose activations are cached.
         resume = 0
@@ -125,20 +183,28 @@ class TaskGraphExecutor:
                 # skip both the load and the execute.
                 stats.blocks_skipped += 1
                 stats.weight_bytes_skipped += bc.weight_bytes
-                stats.flops_skipped += bc.flops
+                stats.flops_skipped += weight * bc.flops
                 continue
             if self._resident[d] != node:
                 stats.weight_bytes_loaded += bc.weight_bytes
                 self._resident[d] = node
             else:
                 stats.weight_bytes_skipped += bc.weight_bytes
-            h = self._block_fn(d)(self.program.node_params[node], h)
+            h = block_fn(d)(self.program.node_params[node], h)
             stats.blocks_executed += 1
-            stats.flops_executed += bc.flops
+            stats.flops_executed += weight * bc.flops
             self._activations[d] = h
             self._act_owner[d] = node
-        stats.tasks_run += 1
-        return self._head_fn(task)(self.program.head_params[task], h)
+        stats.tasks_run += weight
+        return head_fn(task)(self.program.head_params[task], h)
+
+    def run_task(
+        self, task: int, x: jnp.ndarray, stats: ExecutionStats
+    ) -> jnp.ndarray:
+        """Run one task, resuming from the deepest cached shared block."""
+        return self._run_task_impl(
+            task, x, stats, 1, self._block_fn, self._head_fn
+        )
 
     def run(
         self,
@@ -159,6 +225,7 @@ class TaskGraphExecutor:
         Returns:
           (per-task outputs, execution stats).
         """
+        self.clear_activations()  # never resume from a previous input
         results: Dict[int, jnp.ndarray] = {}
         stats = ExecutionStats()
         for t in order:
@@ -166,6 +233,70 @@ class TaskGraphExecutor:
                 stats.tasks_skipped += 1
                 continue
             results[t] = self.run_task(t, x, stats)
+        return results, stats
+
+    # ---------------------------------------------------------------- batch
+    def run_task_batch(
+        self,
+        task: int,
+        xs: jnp.ndarray,
+        stats: ExecutionStats,
+        weight: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Run one task for a stacked request group ``xs``: ``(B, *sample)``.
+
+        Blocks are vmapped over the leading request axis while the Python
+        residency/activation cache logic is shared across the whole group:
+        every block on the path is loaded (and its batched activation cached)
+        **once per group**, so weight loads amortise over ``B`` requests —
+        the batch dimension the roadmap calls the main serving lever.
+
+        Counters keep the cost model's per-request ("logical") accounting:
+        ``weight`` is the number of real requests this execution serves
+        (defaults to ``B``; the engine passes the gate-fired count, the
+        scheduler the unpadded count).  Flop/task counters scale by
+        ``weight``; load counters stay physical (once per group) — that gap
+        *is* the block-loads-saved of batching.
+        """
+        w = int(xs.shape[0]) if weight is None else int(weight)
+        return self._run_task_impl(
+            task, xs, stats, w, self._block_fn_batch, self._head_fn_batch
+        )
+
+    def run_batch(
+        self,
+        xs: jnp.ndarray,
+        order: Sequence[int],
+        gate: Optional[Callable[[int, Dict[int, jnp.ndarray]], bool]] = None,
+        valid: Optional[int] = None,
+    ) -> Tuple[Dict[int, jnp.ndarray], ExecutionStats]:
+        """Execute all tasks in ``order`` once for a stacked request group.
+
+        Args:
+          xs: ``(B, *sample_shape)`` stacked inputs, one row per request
+            (rows ``valid:`` may be padding added by the scheduler).
+          order: task permutation from the ordering solver.
+          gate: optional group-wise gate, same signature as :meth:`run` but
+            receiving *batched* results; a gated-off task is skipped for the
+            whole group.  Per-request gating lives in the serving engine,
+            which drives :meth:`run_task_batch` directly.
+          valid: number of real (non-padding) leading rows used for logical
+            per-request accounting; defaults to ``B``.
+
+        Returns:
+          (per-task batched outputs ``{task: (B, *out_shape)}``, stats).
+          With a cold executor the stats equal
+          ``GraphCostModel.predicted_stats(order, batch_size=valid)`` exactly.
+        """
+        self.clear_activations()  # never resume from a previous input
+        v = int(xs.shape[0]) if valid is None else int(valid)
+        results: Dict[int, jnp.ndarray] = {}
+        stats = ExecutionStats()
+        for t in order:
+            if gate is not None and not gate(t, results):
+                stats.tasks_skipped += v
+                continue
+            results[t] = self.run_task_batch(t, xs, stats, weight=v)
         return results, stats
 
 

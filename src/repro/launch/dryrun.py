@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.launch.hlo_cost import analyze_hlo
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.roofline import (
     RooflineReport, active_params, model_flops_estimate,
 )
@@ -57,7 +57,7 @@ def run_one(
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             plan = make_plan(cfg, shape, mesh, policy)
             # Decode updates its cache in place (§Perf C3): donating the
             # cache argument lets XLA alias the output buffer.

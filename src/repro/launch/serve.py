@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh, set_mesh
 from repro.models import get_model
 from repro.serving import LMServer
 from repro.sharding.policy import TP_POLICY
@@ -33,7 +33,7 @@ def main() -> None:
     mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
     model = get_model(cfg)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         srv = LMServer(model, params, TP_POLICY)
         rng = np.random.default_rng(0)

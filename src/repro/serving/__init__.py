@@ -1,4 +1,8 @@
 """Serving: the Antler multitask engine + batched LM prefill/decode."""
+from repro.serving.batching import (
+    ContinuousBatcher, GenRequest, GenResult, RequestGroup,
+    RequestGroupScheduler,
+)
 from repro.serving.engine import (
     LMServer, MultitaskEngine, MultitaskRequest, MultitaskResponse,
 )

@@ -1,22 +1,35 @@
-"""Continuous batching for the LM server.
+"""Batching schedulers for both serving paths.
 
-A minimal production-shaped scheduler: requests arrive with different prompt
-lengths and generation budgets; slots in a fixed-size batch are recycled the
-moment a sequence finishes, new prompts are prefilled into free slots (with
-right-aligned padding so cache positions line up), and every engine step
-decodes all active slots together.
+* :class:`RequestGroupScheduler` — groups :class:`MultitaskRequest`s for the
+  *task-graph* engine: requests are bucketed by requested task subset (and
+  input shape/dtype) so every group runs one homogeneous schedule through
+  ``TaskGraphExecutor.run_batch``, and each group is padded up to a small
+  fixed set of batch shapes so jit recompilation stays bounded at
+  ``len(batch_shapes)`` batch dims per sample shape.  Per-request gate
+  outcomes are resolved by the engine while a group executes (a task's
+  output depends only on the input row, so running a gated-off row and
+  dropping its output is exact) — the dynamic analogue of bucketing by gate
+  outcome without re-stacking mid-flight.
 
-This is the decode-shape economics the dry-run's ``serve_step`` lowers:
-batch = concurrent slots, cache_len grows per step.  For simplicity the
-scheduler keeps a single shared ``cache_len`` high-water mark per batch
-(slot-level masks handle shorter sequences) — the standard static-shape
-compromise without ragged support.
+* :class:`ContinuousBatcher` — continuous batching for the LM server: a
+  minimal production-shaped scheduler where slots in a fixed-size batch are
+  recycled the moment a sequence finishes, new prompts are prefilled into
+  free slots (with right-aligned padding so cache positions line up), and
+  every engine step decodes all active slots together.  This is the
+  decode-shape economics the dry-run's ``serve_step`` lowers: batch =
+  concurrent slots, cache_len grows per step.  For simplicity the scheduler
+  keeps a single shared ``cache_len`` high-water mark per batch (slot-level
+  masks handle shorter sequences) — the standard static-shape compromise
+  without ragged support.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import (
+    TYPE_CHECKING, Any, Deque, Dict, FrozenSet, List, Optional, Sequence,
+    Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +37,139 @@ import numpy as np
 
 from repro.models.registry import ModelApi
 from repro.sharding.policy import ShardingPolicy, TP_POLICY
+
+if TYPE_CHECKING:  # avoid a module cycle with repro.serving.engine
+    from repro.serving.engine import MultitaskRequest
+
+
+# --------------------------------------------------------------------------
+# Task-graph request grouping
+# --------------------------------------------------------------------------
+
+DEFAULT_BATCH_SHAPES = (1, 4, 16, 64)
+
+
+@dataclasses.dataclass
+class RequestGroup:
+    """One homogeneous, padded execution group for ``run_batch``.
+
+    Attributes:
+      indices: positions of the member requests in the submitted sequence.
+      requests: the member requests themselves (no padding entries).
+      tasks: the shared requested task subset (``None`` = all tasks).
+      xs: ``(P, *sample_shape)`` stacked inputs where ``P`` is one of the
+        scheduler's padded batch shapes; rows ``valid:`` repeat the last real
+        row and are dropped from outputs and logical accounting.
+      valid: number of real leading rows (``len(requests)``).
+    """
+
+    indices: Tuple[int, ...]
+    requests: Tuple["MultitaskRequest", ...]
+    tasks: Optional[FrozenSet[int]]
+    xs: jnp.ndarray
+    valid: int
+
+    @property
+    def padding(self) -> int:
+        return int(self.xs.shape[0]) - self.valid
+
+
+class RequestGroupScheduler:
+    """Bucket + chunk + pad pending multitask requests into groups.
+
+    Invariants (property-tested):
+      * every submitted request lands in exactly one group;
+      * groups are homogeneous: all members share the same task subset and
+        the same input shape/dtype;
+      * every group's padded width is one of ``batch_shapes`` (requests
+        beyond the largest shape are chunked into multiple groups);
+      * padding never changes results — padded rows are replicas of the last
+        real row, executed vmapped and then sliced away.
+
+    Arrival order is preserved within a bucket so latency-sensitive callers
+    get deterministic group membership.
+    """
+
+    def __init__(self, batch_shapes: Sequence[int] = DEFAULT_BATCH_SHAPES):
+        shapes = tuple(sorted({int(s) for s in batch_shapes}))
+        if not shapes or shapes[0] < 1:
+            raise ValueError(f"invalid batch shapes: {batch_shapes!r}")
+        self.batch_shapes = shapes
+
+    def padded_size(self, n: int) -> int:
+        """Smallest allowed batch shape >= ``n`` (callers chunk to the max)."""
+        if n > self.batch_shapes[-1]:
+            raise ValueError(
+                f"group of {n} exceeds the largest batch shape "
+                f"{self.batch_shapes[-1]}; chunk before padding"
+            )
+        for s in self.batch_shapes:
+            if s >= n:
+                return s
+        raise AssertionError("unreachable")
+
+    def chunk_sizes(self, n: int) -> List[Tuple[int, int]]:
+        """Split a bucket of ``n`` requests into ``(take, padded_to)`` chunks.
+
+        Greedy: peel off the largest allowed shape while it fits, and pad
+        the remainder up to the next shape only when the padding does not
+        exceed the remainder itself (<= 50% waste — one padded group beats
+        splitting into more groups that each re-pay the weight loads).  A
+        remainder below the smallest allowed shape must pad up.  E.g. with
+        shapes (1, 4, 16, 64): 17 -> 16 + 1, 5 -> 4 + 1, 3 -> one chunk
+        padded to 4.
+        """
+        out: List[Tuple[int, int]] = []
+        while n > 0:
+            up = next((s for s in self.batch_shapes if s >= n), None)
+            down = max((s for s in self.batch_shapes if s <= n), default=None)
+            if up is not None and (down is None or up - n <= n):
+                out.append((n, up))
+                break
+            out.append((down, down))
+            n -= down
+        return out
+
+    def plan(
+        self,
+        requests: Sequence["MultitaskRequest"],
+        num_tasks: Optional[int] = None,
+    ) -> List[RequestGroup]:
+        """Partition ``requests`` into padded homogeneous groups.
+
+        With ``num_tasks`` given, an explicit all-tasks subset is normalised
+        to ``None`` so it shares a group (and its weight loads) with
+        ``tasks=None`` requests.
+        """
+        all_tasks = None if num_tasks is None else frozenset(range(num_tasks))
+        buckets: Dict[Tuple, List[Tuple[int, Any, jnp.ndarray]]] = {}
+        for i, req in enumerate(requests):
+            x = jnp.asarray(req.x)
+            subset = (
+                None if req.tasks is None
+                else frozenset(int(t) for t in req.tasks)
+            )
+            if subset is not None and subset == all_tasks:
+                subset = None
+            key = (subset, tuple(x.shape), str(x.dtype))
+            buckets.setdefault(key, []).append((i, req, x))
+
+        groups: List[RequestGroup] = []
+        for (subset, _shape, _dtype), members in buckets.items():
+            start = 0
+            for take, p in self.chunk_sizes(len(members)):
+                chunk = members[start:start + take]
+                start += take
+                rows = [x for (_i, _r, x) in chunk]
+                rows.extend([rows[-1]] * (p - take))
+                groups.append(RequestGroup(
+                    indices=tuple(i for (i, _r, _x) in chunk),
+                    requests=tuple(r for (_i, r, _x) in chunk),
+                    tasks=subset,
+                    xs=jnp.stack(rows),
+                    valid=take,
+                ))
+        return groups
 
 
 @dataclasses.dataclass

@@ -1,0 +1,186 @@
+"""Properties of the request-group scheduler.
+
+Invariants checked (with hypothesis when installed, and always with a
+fixed-seed randomized fallback so the suite exercises them in hermetic
+environments):
+
+* every submitted request appears in exactly one group;
+* groups are homogeneous — one task subset and one input shape per group;
+* group widths come from the scheduler's allowed batch shapes, and padding
+  never changes served results.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BlockCost, MSP430, MultitaskProgram, TaskGraphExecutor
+from repro.core.task_graph import TaskGraph
+from repro.serving import (
+    MultitaskEngine, MultitaskRequest, RequestGroupScheduler,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+DIM = 8
+GRAPH = TaskGraph.from_groups([
+    [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+])
+SUBSET_CHOICES = (None, (0,), (1, 2), (0, 3), (2, 1), (0, 1, 2, 3))
+
+
+def _program(seed=0):
+    rng = np.random.default_rng(seed)
+    costs = [BlockCost(weight_bytes=10.0, flops=1.0) for _ in range(GRAPH.depth)]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(DIM, DIM)), jnp.float32)
+        for node in GRAPH.nodes()
+    }
+    heads = [lambda p, x: x @ p] * 4
+    head_params = [jnp.asarray(rng.normal(size=(DIM, 3)), jnp.float32)
+                   for _ in range(4)]
+    return MultitaskProgram(
+        GRAPH, [block] * GRAPH.depth, node_params, heads, head_params, costs
+    )
+
+
+PROGRAM = _program()
+
+
+def _requests_from_spec(spec, rng):
+    """spec: list of (subset_index, wide_input) pairs."""
+    reqs = []
+    for subset_idx, wide in spec:
+        shape = (2, DIM) if wide else (DIM,)
+        reqs.append(MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=shape), jnp.float32),
+            tasks=SUBSET_CHOICES[subset_idx],
+        ))
+    return reqs
+
+
+def _norm(subset):
+    return None if subset is None else frozenset(int(t) for t in subset)
+
+
+def check_plan_invariants(requests, batch_shapes):
+    sched = RequestGroupScheduler(batch_shapes=batch_shapes)
+    groups = sched.plan(requests)
+
+    # Exactly-one-group partition of the submitted indices.
+    covered = [i for g in groups for i in g.indices]
+    assert sorted(covered) == list(range(len(requests)))
+
+    for g in groups:
+        assert g.valid == len(g.indices) == len(g.requests)
+        # Width is an allowed batch shape, large enough for the members.
+        assert int(g.xs.shape[0]) in sched.batch_shapes
+        assert int(g.xs.shape[0]) >= g.valid
+        # Homogeneity: one subset, one sample shape for the whole group.
+        for i, r in zip(g.indices, g.requests):
+            assert requests[i] is r
+            assert _norm(r.tasks) == g.tasks
+            assert tuple(jnp.asarray(r.x).shape) == tuple(g.xs.shape[1:])
+        # Padding rows replicate the last real row.
+        for p in range(g.valid, int(g.xs.shape[0])):
+            np.testing.assert_array_equal(
+                np.asarray(g.xs[p]), np.asarray(g.xs[g.valid - 1]))
+    return groups
+
+
+def check_padding_preserves_results(requests):
+    """Padded grouped serving == unbatched serving, request by request."""
+    eng = MultitaskEngine(PROGRAM, hw=MSP430,
+                          scheduler=RequestGroupScheduler(batch_shapes=(1, 4)))
+    solo = MultitaskEngine(PROGRAM, hw=MSP430,
+                           scheduler=RequestGroupScheduler(batch_shapes=(1,)))
+    for rb, req in zip(eng.serve_batch(requests), requests):
+        rs = solo.serve(req)
+        assert set(rb.outputs) == set(rs.outputs)
+        for t in rb.outputs:
+            np.testing.assert_allclose(
+                np.asarray(rb.outputs[t]), np.asarray(rs.outputs[t]),
+                rtol=1e-5, atol=1e-6)
+
+
+def test_scheduler_invariants_fixed_seeds():
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(1, 12))
+        spec = [(int(rng.integers(0, len(SUBSET_CHOICES))),
+                 bool(rng.integers(0, 2))) for _ in range(n)]
+        reqs = _requests_from_spec(spec, rng)
+        check_plan_invariants(reqs, batch_shapes=(1, 2, 4))
+        check_plan_invariants(reqs, batch_shapes=(1, 4, 16, 64))
+
+
+def test_scheduler_chunks_oversized_buckets():
+    rng = np.random.default_rng(1)
+    reqs = _requests_from_spec([(0, False)] * 11, rng)  # one big bucket
+    groups = check_plan_invariants(reqs, batch_shapes=(1, 2, 4))
+    assert all(g.valid <= 4 for g in groups)
+    assert len(groups) == 3  # 4 + 4 + 3
+
+
+def test_chunk_sizes_avoid_gross_padding():
+    sched = RequestGroupScheduler(batch_shapes=(1, 4, 16, 64))
+    # Peel exact shapes instead of padding 17 -> 64 (3.7x wasted rows).
+    assert sched.chunk_sizes(17) == [(16, 16), (1, 1)]
+    assert sched.chunk_sizes(5) == [(4, 4), (1, 1)]
+    # <= 50% waste pads up: one group amortises loads better than several.
+    assert sched.chunk_sizes(3) == [(3, 4)]
+    assert sched.chunk_sizes(2) == [(2, 4)]
+    assert sched.chunk_sizes(64) == [(64, 64)]
+    assert sched.chunk_sizes(80) == [(64, 64), (16, 16)]
+    # Remainder below the smallest shape must pad up.
+    assert RequestGroupScheduler(batch_shapes=(4,)).chunk_sizes(1) == [(1, 4)]
+
+
+def test_scheduler_rejects_bad_shapes():
+    import pytest
+    with pytest.raises(ValueError):
+        RequestGroupScheduler(batch_shapes=())
+    with pytest.raises(ValueError):
+        RequestGroupScheduler(batch_shapes=(0, 4))
+    with pytest.raises(ValueError):
+        RequestGroupScheduler(batch_shapes=(2,)).padded_size(3)
+
+
+def test_padding_preserves_results_fixed_seed():
+    rng = np.random.default_rng(2)
+    spec = [(int(rng.integers(0, len(SUBSET_CHOICES))), False)
+            for _ in range(7)]
+    check_padding_preserves_results(_requests_from_spec(spec, rng))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        spec=st.lists(
+            st.tuples(st.integers(0, len(SUBSET_CHOICES) - 1), st.booleans()),
+            min_size=1, max_size=12,
+        ),
+        data_seed=st.integers(0, 2**16),
+    )
+    def test_scheduler_invariants_hypothesis(spec, data_seed):
+        rng = np.random.default_rng(data_seed)
+        reqs = _requests_from_spec(spec, rng)
+        check_plan_invariants(reqs, batch_shapes=(1, 2, 4))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        spec=st.lists(
+            st.tuples(st.integers(0, len(SUBSET_CHOICES) - 1), st.just(False)),
+            min_size=1, max_size=6,
+        ),
+        data_seed=st.integers(0, 2**16),
+    )
+    def test_padding_preserves_results_hypothesis(spec, data_seed):
+        rng = np.random.default_rng(data_seed)
+        check_padding_preserves_results(_requests_from_spec(spec, rng))

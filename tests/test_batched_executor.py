@@ -1,0 +1,273 @@
+"""Batched execution path: run_batch == per-request run loop, and batched
+ExecutionStats == the cost model's batch-extended predictions."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BlockCost, GraphCostModel, MSP430, MultitaskProgram, TaskGraphExecutor,
+)
+from repro.core.task_graph import TaskGraph, enumerate_task_graphs
+from repro.core.types import ExecutionStats
+from repro.serving import (
+    MultitaskEngine, MultitaskRequest, RequestGroupScheduler,
+)
+
+DIM = 8
+
+
+def _program(graph, dim=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    costs = [BlockCost(weight_bytes=100.0 * (d + 1), flops=10.0 * (d + 1))
+             for d in range(graph.depth)]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)), jnp.float32)
+        for node in graph.nodes()
+    }
+    heads = [lambda p, x: x @ p] * graph.num_tasks
+    head_params = [
+        jnp.asarray(rng.normal(size=(dim, 3)), jnp.float32)
+        for _ in range(graph.num_tasks)
+    ]
+    return MultitaskProgram(
+        graph, [block] * graph.depth, node_params, heads, head_params, costs
+    )
+
+
+def _sequential_reference(ex, xs, order, gate=None):
+    """Per-request run loop (reset between requests, like engine.serve)."""
+    outs, stats = [], ExecutionStats()
+    for i in range(xs.shape[0]):
+        ex.reset()
+        o, s = ex.run(xs[i], order, gate)
+        outs.append(o)
+        stats = stats.merge(s)
+    return outs, stats
+
+
+def _random_cases(seed=0, n_graphs=6):
+    rng = np.random.default_rng(seed)
+    graphs = enumerate_task_graphs(4, 2)
+    idx = rng.choice(len(graphs), size=min(n_graphs, len(graphs)),
+                     replace=False)
+    for k, gi in enumerate(idx):
+        graph = graphs[int(gi)]
+        order = list(rng.permutation(graph.num_tasks))
+        b = int(rng.integers(1, 7))
+        yield k, graph, order, b, rng
+
+
+def test_run_batch_matches_per_request_run():
+    for k, graph, order, b, rng in _random_cases():
+        prog = _program(graph, seed=k)
+        ex = TaskGraphExecutor(prog)
+        xs = jnp.asarray(rng.normal(size=(b, DIM)), jnp.float32)
+        ex.reset()
+        out_b, _ = ex.run_batch(xs, order)
+        outs_seq, _ = _sequential_reference(ex, xs, order)
+        for t in order:
+            ref = np.stack([np.asarray(outs_seq[i][t]) for i in range(b)])
+            np.testing.assert_allclose(
+                np.asarray(out_b[t]), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_run_batch_with_task_subset_gate():
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+    ])
+    prog = _program(graph)
+    ex = TaskGraphExecutor(prog)
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.normal(size=(4, DIM)), jnp.float32)
+    wanted = {1, 3}
+
+    def gate(t, results):
+        return t in wanted
+
+    ex.reset()
+    out_b, stats_b = ex.run_batch(xs, [0, 1, 2, 3], gate)
+    assert set(out_b) == wanted
+    assert stats_b.tasks_skipped == 2 * 4  # two gated-off tasks x batch
+    outs_seq, _ = _sequential_reference(ex, xs, [0, 1, 2, 3], gate)
+    for t in wanted:
+        ref = np.stack([np.asarray(outs_seq[i][t]) for i in range(4)])
+        np.testing.assert_allclose(
+            np.asarray(out_b[t]), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_stats_equal_batch_extended_prediction():
+    for k, graph, order, b, rng in _random_cases(seed=1):
+        prog = _program(graph, seed=k)
+        cm = GraphCostModel(graph, prog.block_costs, MSP430)
+        ex = TaskGraphExecutor(prog)
+        xs = jnp.asarray(rng.normal(size=(b, DIM)), jnp.float32)
+        ex.reset()
+        _, stats = ex.run_batch(xs, order)
+        assert stats == cm.predicted_stats(order, batch_size=b)
+
+
+def test_batched_stats_vs_sum_of_per_request_predictions():
+    """Per-request counters sum across the batch; load counters amortise.
+
+    ``sum_i predicted_stats(order)`` over the B requests equals the batched
+    stats on every per-request counter (flops, block skips, task counts);
+    the batched weight loads are the *single*-request loads (paid once per
+    group), which is exactly the block-loads-saved of batching.
+    """
+    for k, graph, order, b, rng in _random_cases(seed=2):
+        prog = _program(graph, seed=k)
+        cm = GraphCostModel(graph, prog.block_costs, MSP430)
+        ex = TaskGraphExecutor(prog)
+        xs = jnp.asarray(rng.normal(size=(b, DIM)), jnp.float32)
+        ex.reset()
+        _, stats = ex.run_batch(xs, order)
+
+        per_req = cm.predicted_stats(order)
+        summed = ExecutionStats()
+        for _ in range(b):
+            summed = summed.merge(per_req)
+        assert stats.flops_executed == summed.flops_executed
+        assert stats.flops_skipped == summed.flops_skipped
+        assert stats.tasks_run == summed.tasks_run
+        # Loads are physical: paid once per group, not once per request.
+        assert stats.weight_bytes_loaded == per_req.weight_bytes_loaded
+        saved = summed.weight_bytes_loaded - stats.weight_bytes_loaded
+        assert saved == (b - 1) * per_req.weight_bytes_loaded
+
+
+def test_run_batch_padding_rows_do_not_change_results():
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+    ])
+    prog = _program(graph)
+    ex = TaskGraphExecutor(prog)
+    rng = np.random.default_rng(5)
+    xs = jnp.asarray(rng.normal(size=(3, DIM)), jnp.float32)
+    padded = jnp.concatenate([xs, jnp.tile(xs[-1:], (5, 1))])
+    order = [2, 0, 3, 1]
+    ex.reset()
+    out_exact, stats_exact = ex.run_batch(xs, order)
+    ex.reset()
+    out_pad, stats_pad = ex.run_batch(padded, order, valid=3)
+    for t in order:
+        np.testing.assert_allclose(
+            np.asarray(out_pad[t][:3]), np.asarray(out_exact[t]),
+            rtol=1e-5, atol=1e-6)
+    # Logical accounting ignores the padding rows entirely.
+    assert stats_pad == stats_exact
+
+
+def test_run_batch_never_resumes_from_previous_input():
+    """Back-to-back run_batch calls with same-shape, different inputs must
+    not reuse the first call's cached activations."""
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+    ])
+    prog = _program(graph)
+    ex = TaskGraphExecutor(prog)
+    rng = np.random.default_rng(13)
+    xs1 = jnp.asarray(rng.normal(size=(4, DIM)), jnp.float32)
+    xs2 = jnp.asarray(rng.normal(size=(4, DIM)), jnp.float32)
+    order = [0, 1, 2, 3]
+    ex.run_batch(xs1, order)
+    out2, _ = ex.run_batch(xs2, order)  # no reset in between
+    ex.reset()
+    ref2, _ = ex.run_batch(xs2, order)
+    for t in order:
+        np.testing.assert_allclose(
+            np.asarray(out2[t]), np.asarray(ref2[t]), rtol=1e-5, atol=1e-6)
+    # Same property for the single-request path.
+    ex.reset()
+    ex.run(xs1[0], order)
+    out_s, _ = ex.run(xs2[0], order)
+    for t in order:
+        np.testing.assert_allclose(
+            np.asarray(out_s[t]), np.asarray(ref2[t][0]),
+            rtol=1e-5, atol=1e-6)
+
+
+def test_engine_groups_none_with_explicit_full_subset():
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+    ])
+    prog = _program(graph, seed=15)
+    eng = MultitaskEngine(prog, hw=MSP430)
+    rng = np.random.default_rng(15)
+    reqs = [
+        MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(DIM,)), jnp.float32), tasks=s)
+        for s in (None, (0, 1, 2, 3), (3, 2, 1, 0), None)
+    ]
+    resp = eng.serve_batch(reqs)
+    # All four are semantically all-tasks: one group, loads amortised.
+    assert [r.group_size for r in resp] == [4, 4, 4, 4]
+    # Each response owns its stats object.
+    assert len({id(r.stats) for r in resp}) == len(resp)
+    for r in resp:
+        assert set(r.outputs) == {0, 1, 2, 3}
+
+
+def test_engine_serve_batch_matches_per_request_serve():
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+    ])
+    prog = _program(graph, seed=7)
+    eng = MultitaskEngine(prog, hw=MSP430)
+    solo = MultitaskEngine(prog, hw=MSP430,
+                           scheduler=RequestGroupScheduler(batch_shapes=(1,)))
+    rng = np.random.default_rng(7)
+    subsets = [None, (1, 2), None, (0, 3), (1, 2), None, (1, 2)]
+    reqs = [
+        MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(DIM,)), jnp.float32), tasks=s)
+        for s in subsets
+    ]
+    batched = eng.serve_batch(reqs)
+    for rb, req in zip(batched, reqs):
+        rs = solo.serve(req)
+        assert set(rb.outputs) == set(rs.outputs)
+        for t in rb.outputs:
+            np.testing.assert_allclose(
+                np.asarray(rb.outputs[t]), np.asarray(rs.outputs[t]),
+                rtol=1e-5, atol=1e-6)
+    # Requests sharing (subset=None) were actually grouped.
+    assert max(r.group_size for r in batched) > 1
+
+
+def test_engine_serve_batch_per_element_gates():
+    """A gate firing for only some rows of a group stays exact per row."""
+    graph = TaskGraph.from_groups([
+        [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+    ])
+    prog = _program(graph, seed=9)
+
+    def gate(outputs):  # fire on the sign of task 0's first logit
+        return bool(np.asarray(outputs[0])[0] > 0)
+
+    gates = {t: gate for t in (1, 2, 3)}
+    order = [0, 1, 2, 3]
+    eng = MultitaskEngine(prog, hw=MSP430, gates=gates, order=order)
+    solo = MultitaskEngine(prog, hw=MSP430, gates=gates, order=order,
+                           scheduler=RequestGroupScheduler(batch_shapes=(1,)))
+    rng = np.random.default_rng(11)
+    reqs = [
+        MultitaskRequest(x=jnp.asarray(rng.normal(size=(DIM,)), jnp.float32))
+        for _ in range(8)
+    ]
+    batched = eng.serve_batch(reqs)
+    fired = {frozenset(r.outputs) for r in batched}
+    for rb, req in zip(batched, reqs):
+        rs = solo.serve(req)
+        assert set(rb.outputs) == set(rs.outputs)
+        for t in rb.outputs:
+            np.testing.assert_allclose(
+                np.asarray(rb.outputs[t]), np.asarray(rs.outputs[t]),
+                rtol=1e-5, atol=1e-6)
+    # The seed is chosen so both gate outcomes occur within one group.
+    assert len(fired) > 1

@@ -22,8 +22,9 @@ from repro.launch.specs import make_plan
 from repro.launch.hlo_cost import analyze_hlo
 from repro.models.config import InputShape
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh, set_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
 out = {}
 cases = [
     ("granite-34b", InputShape("t", 64, 8, "train")),
@@ -32,7 +33,7 @@ cases = [
     ("zamba2-2.7b", InputShape("d", 64, 8, "decode")),
     ("whisper-medium", InputShape("t", 64, 8, "train")),
 ]
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     for arch, shape in cases:
         cfg = get_smoke_config(arch)
         plan = make_plan(cfg, shape, mesh, "tp")

@@ -1,5 +1,8 @@
 """Hypothesis property tests over the system's core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
