@@ -1,8 +1,10 @@
 """Shared helpers for the paper-reproduction benchmarks."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
-from typing import Callable, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -22,6 +24,26 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """One CSV row: ``name,us_per_call,derived``."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def update_bench_json(path: str, section: str, payload: Dict[str, Any]) -> None:
+    """Merge one benchmark's machine-readable results into a JSON file.
+
+    Each benchmark owns a top-level ``section`` key, so the batch sweep and
+    the multi-group sweep can share ``BENCH_serving.json`` without clobbering
+    each other; corrupt/absent files start fresh.
+    """
+    p = pathlib.Path(path)
+    data: Dict[str, Any] = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+            if not isinstance(data, dict):
+                data = {}
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data[section] = payload
+    p.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
 
 
 def random_affinity(n: int, d: int, seed: int = 0) -> np.ndarray:

@@ -18,6 +18,9 @@ to ``GraphCostModel.predicted_stats(order, batch_size=B)``.
 
 ``--dry-run`` shrinks sizes/iterations and skips the wall-clock speedup
 assertion (CI boxes have noisy clocks); the equivalence checks always run.
+Machine-readable results (per-request seconds, weight bytes loaded/skipped,
+dispatch counts) land in the ``batch_sweep`` section of ``BENCH_serving.json``
+(``--json`` to relocate/disable).
 
 Usage: ``PYTHONPATH=src python benchmarks/serving_batch.py [--dry-run]``
 """
@@ -33,7 +36,7 @@ import numpy as np
 
 if __package__ in (None, ""):  # `python benchmarks/serving_batch.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, update_bench_json
 from repro.core import (
     BlockCost, GraphCostModel, MSP430, MultitaskProgram, TaskGraphExecutor,
     optimal_order,
@@ -100,6 +103,8 @@ def main(argv=None) -> int:
                     help="tiny sizes, 1 iteration, no wall-clock assertion")
     ap.add_argument("--dim", type=int, default=None,
                     help="block width (default 256, dry-run 16)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable results file ('' disables)")
     args = ap.parse_args(argv)
 
     dim = args.dim or (16 if args.dry_run else 256)
@@ -114,11 +119,14 @@ def main(argv=None) -> int:
 
     print("name,us_per_call,derived")
     speedups = {}
+    rows = []
     for b in batches:
         xs = jnp.asarray(rng.normal(size=(b, dim)), jnp.float32)
 
         # Correctness first: batched == per-request, stats == prediction.
+        d0 = ex.dispatch_count
         out_b, stats_b = run_batched(ex, xs, order)
+        batch_dispatches = ex.dispatch_count - d0
         seq = run_sequential(ex, xs, order)
         for t in order:
             ref = np.stack([np.asarray(seq[i][0][t]) for i in range(b)])
@@ -128,6 +136,9 @@ def main(argv=None) -> int:
         assert stats_b == pred, (
             f"batch={b}: executor stats diverge from cost model\n"
             f"  got  {stats_b}\n  want {pred}")
+        # Fused-suffix execution: one dispatch per task for the whole group.
+        assert batch_dispatches == len(order), (
+            f"batch={b}: {batch_dispatches} dispatches for {len(order)} tasks")
 
         t_seq = time_call(run_sequential, ex, xs, order, warmup=1, iters=iters)
         t_bat = time_call(run_batched, ex, xs, order, warmup=1, iters=iters)
@@ -141,6 +152,21 @@ def main(argv=None) -> int:
         emit(f"serve_batch_b{b}", per_req_bat,
              f"per_request;batch={b};speedup={speedup:.2f}x;"
              f"weight_bytes_load_saved={loads_saved:.0f}")
+        rows.append({
+            "batch": b,
+            "per_request_seconds_sequential": per_req_seq * 1e-6,
+            "per_request_seconds_batched": per_req_bat * 1e-6,
+            "speedup": speedup,
+            "weight_bytes_loaded": stats_b.weight_bytes_loaded,
+            "weight_bytes_skipped": stats_b.weight_bytes_skipped,
+            "weight_bytes_load_saved_vs_sequential": loads_saved,
+            "dispatches_batched": batch_dispatches,
+            "dispatches_per_task": batch_dispatches / len(order),
+        })
+    if args.json:
+        update_bench_json(args.json, "batch_sweep", {
+            "dim": dim, "dry_run": bool(args.dry_run), "rows": rows,
+        })
 
     if not args.dry_run and 16 in speedups:
         if speedups[16] < 4.0:

@@ -9,3 +9,6 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python benchmarks/serving_batch.py --dry-run
+# Multi-group warm-start sweep: warm-vs-cold equivalence, exact counters,
+# fused single-dispatch, and the >= 1.5x load-reduction gate.
+python benchmarks/serving_groups.py --dry-run

@@ -32,6 +32,7 @@ from repro.core.ordering import (
     branch_and_bound_order,
     brute_force_order,
     fitness,
+    greedy_2opt_order,
     held_karp_order,
     optimal_order,
 )

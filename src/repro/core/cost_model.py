@@ -16,12 +16,14 @@ reproduces the paper's Figure-4 example where every block costs 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.task_graph import TaskGraph
-from repro.core.types import BlockCost, ExecutionStats, HardwareModel
+from repro.core.types import (
+    BlockCost, ExecutionStats, HardwareModel, NodeId, Residency,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +58,20 @@ class GraphCostModel:
         """Cold cost of running ``task`` with nothing cached."""
         return sum(self.block_cost(d) for d, _ in self.graph.path(task))
 
+    def load_cost(self, depth: int) -> float:
+        """Load-only component of :meth:`block_cost` (weight streaming).
+
+        This is the part of a block's cost that warm starts can save: the
+        execute part is always paid for a fresh input, but the load is
+        skipped whenever the block is still resident from an earlier group.
+        """
+        if self.hw is None:
+            return 1.0  # the Figure-4 unit-load convention
+        bc = self.block_costs[depth]
+        if self.metric == "energy":
+            return self.hw.energy_joules(0.0, 2.0 * bc.weight_bytes)
+        return bc.load_seconds(self.hw)
+
     def switching_cost(self, prev: int, nxt: int) -> float:
         """``c[prev, nxt]``: cost of the non-shared suffix of ``nxt``."""
         if prev == nxt:
@@ -63,6 +79,32 @@ class GraphCostModel:
         shared = self.graph.shared_prefix_depth(prev, nxt)
         return sum(
             self.block_cost(d) for d in range(shared, self.graph.depth)
+        )
+
+    def warm_switching_cost(self, prev: int, nxt: int) -> float:
+        """Load-only cost of starting ``nxt`` with ``prev``'s path resident.
+
+        The inter-*group* analogue of :meth:`switching_cost`: across a group
+        boundary activations never survive (they belong to the previous
+        group's inputs), so every block of ``nxt`` executes — only the loads
+        of the still-resident shared prefix are saved.  This is the edge
+        weight of the group-ordering pass.
+        """
+        shared = self.graph.shared_prefix_depth(prev, nxt)
+        return sum(self.load_cost(d) for d in range(shared, self.graph.depth))
+
+    def resume_load_cost(self, resident: Residency, task: int) -> float:
+        """Load cost of ``task``'s blocks not present in ``resident``.
+
+        Generalises :meth:`warm_switching_cost` to an arbitrary residency
+        snapshot (``TaskGraphExecutor.residency_state()``), e.g. the state a
+        persistent engine carries between ``serve_batch`` calls.
+        """
+        path = self.graph.path(task)
+        return sum(
+            self.load_cost(d)
+            for d in range(self.graph.depth)
+            if resident[d] != path[d]
         )
 
     def cost_matrix(self) -> np.ndarray:
@@ -103,21 +145,23 @@ class GraphCostModel:
         per_task = sum(bc.weight_bytes for bc in self.block_costs)
         return per_task * self.graph.num_tasks
 
-    def predicted_stats(
-        self, order: Sequence[int], batch_size: int = 1
-    ) -> ExecutionStats:
-        """Counter-level prediction the executor must match exactly.
+    def _predict_into(
+        self,
+        order: Sequence[int],
+        batch_size: int,
+        resident: List[Optional[NodeId]],
+        stats: ExecutionStats,
+    ) -> None:
+        """One group's counter prediction, mutating ``resident``/``stats``.
 
-        With ``batch_size > 1`` this predicts the *batched* executor
-        (``TaskGraphExecutor.run_batch`` on a cold executor serving
-        ``batch_size`` stacked requests): block invocations and weight loads
-        happen once per group (loads amortise across the batch), while flop
-        and task counters scale per request.  ``batch_size=1`` is the
-        original single-request prediction.
+        Mirrors ``TaskGraphExecutor._run_task_impl`` exactly: the first task
+        of a group never resumes from activations (the executor clears them
+        at every input/group boundary), but any block still resident in
+        ``resident`` skips its load while still executing.
         """
-        stats = ExecutionStats()
         prev: Optional[int] = None
         for t in order:
+            path = self.graph.path(t)
             shared = (
                 self.graph.shared_prefix_depth(prev, t) if prev is not None else 0
             )
@@ -129,10 +173,73 @@ class GraphCostModel:
                     stats.flops_skipped += batch_size * bc.flops
                 else:
                     stats.blocks_executed += 1
-                    stats.weight_bytes_loaded += bc.weight_bytes
+                    if resident[d] == path[d]:
+                        stats.weight_bytes_skipped += bc.weight_bytes
+                    else:
+                        stats.weight_bytes_loaded += bc.weight_bytes
                     stats.flops_executed += batch_size * bc.flops
+                resident[d] = path[d]
             stats.tasks_run += batch_size
             prev = t
+
+    def predicted_stats(
+        self,
+        order: Sequence[int],
+        batch_size: int = 1,
+        resume: Optional[Residency] = None,
+    ) -> ExecutionStats:
+        """Counter-level prediction the executor must match exactly.
+
+        With ``batch_size > 1`` this predicts the *batched* executor
+        (``TaskGraphExecutor.run_batch`` serving ``batch_size`` stacked
+        requests): block invocations and weight loads happen once per group
+        (loads amortise across the batch), while flop and task counters
+        scale per request.  ``batch_size=1`` is the original single-request
+        prediction.
+
+        ``resume`` is an initial residency snapshot
+        (``TaskGraphExecutor.residency_state()``) for *warm* starts: blocks
+        already resident skip their loads but still execute (activations
+        never cross a group boundary).  ``resume=None`` is the cold
+        prediction.
+        """
+        resident: List[Optional[NodeId]] = (
+            list(resume) if resume is not None else [None] * self.graph.depth
+        )
+        if len(resident) != self.graph.depth:
+            raise ValueError(
+                f"resume has {len(resident)} slots, expected {self.graph.depth}"
+            )
+        stats = ExecutionStats()
+        self._predict_into(order, batch_size, resident, stats)
+        return stats
+
+    def predicted_group_stats(
+        self,
+        plan: Sequence[Tuple[Sequence[int], int]],
+        resume: Optional[Residency] = None,
+    ) -> ExecutionStats:
+        """Cumulative prediction for a warm multi-group schedule.
+
+        ``plan`` is the executed schedule: one ``(order, batch_size)`` entry
+        per group, in execution sequence, where ``order`` lists the tasks
+        that group actually runs (the engine's task order filtered to the
+        group's subset) and ``batch_size`` its valid (unpadded) request
+        count.  Residency carries from each group into the next —
+        activations do not — so this predicts exactly what the warm-start
+        engine's cumulative counters will be.  ``resume`` seeds the initial
+        residency (a persistent engine warm from earlier batches).
+        """
+        resident: List[Optional[NodeId]] = (
+            list(resume) if resume is not None else [None] * self.graph.depth
+        )
+        if len(resident) != self.graph.depth:
+            raise ValueError(
+                f"resume has {len(resident)} slots, expected {self.graph.depth}"
+            )
+        stats = ExecutionStats()
+        for order, batch_size in plan:
+            self._predict_into(order, int(batch_size), resident, stats)
         return stats
 
 

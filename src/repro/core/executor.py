@@ -17,16 +17,35 @@ hierarchy:
 
 The executor is generic over block semantics: it takes callables, so the
 same engine drives the CNN-scale paper benchmarks and the transformer-scale
-serving path.  Per-block work is jitted once per (depth, shape) and the
-caching logic stays in Python — the task graph is static, so this is the
-same "compile per suffix" structure a production serving stack would use.
+serving path.
+
+Dispatch strategy: by default each contiguous non-shared suffix
+(resume-depth -> head) is compiled into a **single fused program** keyed by
+``(task, resume_depth, batched, input shape)`` — one dispatch per task
+instead of one per block.  When the suffix's blocks are homogeneous (same
+apply function, same parameter shapes, shape-preserving) the fused program
+stacks the suffix's parameters and drives them with ``lax.scan``; otherwise
+the suffix is unrolled inside one jitted program.  ``fused=False`` keeps the
+original per-block dispatch path as the reference implementation; both paths
+produce identical counters and (allclose-)identical outputs, which the tests
+assert.  The compile cache is bounded by the same fixed-shape discipline the
+request-group scheduler enforces: tasks x (depth+1) resume points x the
+scheduler's padded batch shapes.
+
+Warm starts: :meth:`TaskGraphExecutor.residency_state` exposes the per-depth
+resident blocks so callers (the serving engine, the cost model) can account
+cross-group weight-load reuse; :meth:`clear_activations` is the warm-start
+entry point — it invalidates input-dependent activation caches while keeping
+the input-independent weight residency, so a new request group resumes with
+the previous group's blocks still "in memory".
 
 ``ExecutionStats`` counters must match ``GraphCostModel.predicted_stats``
-exactly; a property test asserts this for random graphs and orders.
+exactly (including warm starts via its ``resume`` argument); property tests
+assert this for random graphs, orders, and multi-group plans.
 
 Request *groups* execute through :meth:`TaskGraphExecutor.run_batch`: the
 same residency/prefix-reuse logic, but every block is vmapped over a stacked
-batch of requests so one weight load (and one block invocation) serves the
+batch of requests so one weight load (and one fused dispatch) serves the
 whole group.  The batched counters match
 ``GraphCostModel.predicted_stats(order, batch_size=B)``.
 """
@@ -40,9 +59,11 @@ import jax.numpy as jnp
 
 from repro.core.constraints import Constraints
 from repro.core.task_graph import TaskGraph
-from repro.core.types import BlockCost, ExecutionStats
+from repro.core.types import BlockCost, ExecutionStats, NodeId
 
-NodeId = Tuple[int, Tuple[int, ...]]  # (depth, group)
+# What residency_state returns and what GraphCostModel.predicted_stats
+# accepts as ``resume`` (the concrete tuple form of types.Residency).
+ResidencyState = Tuple[Optional[NodeId], ...]
 
 # block_fns[d](params, x) -> y  for depth-d blocks of the common architecture
 BlockFn = Callable[[Any, jnp.ndarray], jnp.ndarray]
@@ -76,16 +97,45 @@ class MultitaskProgram:
                 raise ValueError(f"missing params for task-graph node {node}")
 
 
-class TaskGraphExecutor:
-    """Stateful executor with block residency + activation caching."""
+def _leaf_specs(params: Any) -> Tuple:
+    """(treedef, leaf shapes/dtypes) fingerprint for stackability checks."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return treedef, tuple((jnp.shape(l), jnp.result_type(l)) for l in leaves)
 
-    def __init__(self, program: MultitaskProgram, jit_blocks: bool = True):
+
+class TaskGraphExecutor:
+    """Stateful executor with block residency + activation caching.
+
+    Args:
+      program: the bound multitask program.
+      jit_blocks: jit-compile the dispatched programs (fused suffixes, or the
+        per-block reference path).
+      fused: execute each non-shared suffix as one fused program (default);
+        ``False`` selects the per-block reference dispatch path.
+    """
+
+    def __init__(
+        self,
+        program: MultitaskProgram,
+        jit_blocks: bool = True,
+        fused: bool = True,
+    ):
         self.program = program
         self._jit = jit_blocks
+        self._fused = fused
         self._compiled: Dict[int, Callable] = {}
         self._compiled_heads: Dict[int, Callable] = {}
         self._compiled_batch: Dict[int, Callable] = {}
         self._compiled_heads_batch: Dict[int, Callable] = {}
+        # (task, resume, batched, x_shape, x_dtype) -> (callable, mode); mode
+        # is "scan" (stacked params + lax.scan) or "unrolled".
+        self._compiled_fused: Dict[Tuple, Tuple[Callable, str]] = {}
+        # (task, resume) -> stacked suffix params for the scan mode.
+        self._stacked_params: Dict[Tuple[int, int], Any] = {}
+        # Physical program dispatches (jitted-call invocations).  Cumulative;
+        # not part of ExecutionStats (those are cost-model-predictable logical
+        # counters — dispatches depend on the fused/per-block mode).
+        self.dispatch_count = 0
         self.reset()
 
     # ---------------------------------------------------------------- state
@@ -96,19 +146,43 @@ class TaskGraphExecutor:
         self.clear_activations()
 
     def clear_activations(self) -> None:
-        """Drop cached activations but keep weight residency.
+        """Drop cached activations but keep weight residency (warm start).
 
         Weights are input-independent, activations are not: the whole-order
         entry points (:meth:`run` / :meth:`run_batch`) call this on entry so
         a new input can never resume from a previous input's activations,
-        while the resident blocks remain loaded.  Callers driving
-        :meth:`run_task` / :meth:`run_task_batch` directly own this contract
-        themselves (the serving engine resets per group).
+        while the resident blocks remain loaded.  This is the warm-start
+        boundary the serving engine uses between request groups.  Callers
+        driving :meth:`run_task` / :meth:`run_task_batch` directly own this
+        contract themselves.
         """
         depth = self.program.graph.depth
         self._activations: List[Optional[jnp.ndarray]] = [None] * depth
         self._act_owner: List[Optional[NodeId]] = [None] * depth
         self._act_shape: Optional[Tuple[int, ...]] = None
+
+    def residency_state(self) -> ResidencyState:
+        """Per-depth resident blocks, for warm-start cost accounting.
+
+        Feed this to ``GraphCostModel.predicted_stats(..., resume=state)``
+        (or ``predicted_group_stats``) to predict exactly what a warm
+        continuation will load versus skip.
+        """
+        return tuple(self._resident)
+
+    def set_residency(self, state: Sequence[Optional[NodeId]]) -> None:
+        """Restore a residency snapshot (testing / replay helper).
+
+        Only weight residency is restored; activations are always cleared —
+        they belong to a specific input, which a snapshot does not carry.
+        """
+        depth = self.program.graph.depth
+        if len(state) != depth:
+            raise ValueError(
+                f"residency state has {len(state)} slots, expected {depth}"
+            )
+        self._resident = list(state)
+        self.clear_activations()
 
     def _guard_act_shape(self, shape: Tuple[int, ...]) -> None:
         """Invalidate cached activations produced for a different input shape
@@ -117,6 +191,7 @@ class TaskGraphExecutor:
             self.clear_activations()
         self._act_shape = shape
 
+    # ------------------------------------------------- per-block (reference)
     def _block_fn(self, depth: int) -> Callable:
         if depth not in self._compiled:
             fn = self.program.block_fns[depth]
@@ -145,6 +220,140 @@ class TaskGraphExecutor:
             self._compiled_heads_batch[task] = jax.jit(fn) if self._jit else fn
         return self._compiled_heads_batch[task]
 
+    # -------------------------------------------------------- fused suffix
+    def _suffix_params(self, task: int, resume: int) -> Tuple[Any, ...]:
+        path = self.program.graph.path(task)
+        return tuple(
+            self.program.node_params[path[d]]
+            for d in range(resume, self.program.graph.depth)
+        )
+
+    def _stacked_suffix_params(self, task: int, resume: int) -> Any:
+        key = (task, resume)
+        if key not in self._stacked_params:
+            params = self._suffix_params(task, resume)
+            self._stacked_params[key] = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *params
+            )
+        return self._stacked_params[key]
+
+    def _fused_fn(
+        self, task: int, resume: int, batched: bool, x: jnp.ndarray
+    ) -> Tuple[Callable, str]:
+        """Build (or fetch) the fused suffix program for one resume point.
+
+        The program runs blocks ``resume .. depth-1`` plus the task head in a
+        single dispatch and returns ``(per-depth activations, head output)``
+        — the intermediate activations feed the Python-level cache so later
+        tasks can still resume mid-path.  Mode "scan" stacks the suffix's
+        (homogeneous, shape-preserving) params and iterates with
+        ``lax.scan``; mode "unrolled" traces the heterogeneous suffix block
+        by block inside one program.
+        """
+        key = (task, resume, batched, tuple(x.shape), jnp.result_type(x))
+        if key in self._compiled_fused:
+            return self._compiled_fused[key]
+
+        graph = self.program.graph
+        depth = graph.depth
+        suffix = list(range(resume, depth))
+        base_fns = [self.program.block_fns[d] for d in suffix]
+        head = self.program.head_fns[task]
+        if batched:
+            fns = [jax.vmap(f, in_axes=(None, 0)) for f in base_fns]
+            head = jax.vmap(head, in_axes=(None, 0))
+        else:
+            fns = list(base_fns)
+
+        mode = "unrolled"
+        if len(suffix) >= 2 and all(f is base_fns[0] for f in base_fns):
+            params = self._suffix_params(task, resume)
+            specs = {_leaf_specs(p) for p in params}
+            if len(specs) == 1:
+                # Same fn + same param shapes; scan also needs the carry
+                # shape to be invariant — verify without executing.
+                try:
+                    spec = jax.eval_shape(
+                        fns[0],
+                        params[0],
+                        jax.ShapeDtypeStruct(x.shape, jnp.result_type(x)),
+                    )
+                    if (
+                        spec.shape == tuple(x.shape)
+                        and spec.dtype == jnp.result_type(x)
+                    ):
+                        mode = "scan"
+                except Exception:
+                    mode = "unrolled"
+
+        if mode == "scan":
+            step_fn = fns[0]
+
+            def fused(stacked, head_p, h):
+                def step(carry, p):
+                    y = step_fn(p, carry)
+                    return y, y
+
+                h_last, acts = jax.lax.scan(step, h, stacked)
+                return acts, head(head_p, h_last)
+
+        else:
+
+            def fused(params_tuple, head_p, h):
+                acts = []
+                for f, p in zip(fns, params_tuple):
+                    h = f(p, h)
+                    acts.append(h)
+                return tuple(acts), head(head_p, h)
+
+        compiled = jax.jit(fused) if self._jit else fused
+        self._compiled_fused[key] = (compiled, mode)
+        return compiled, mode
+
+    def _run_suffix_fused(
+        self, task: int, resume: int, h: jnp.ndarray, batched: bool
+    ) -> jnp.ndarray:
+        """One dispatch for the whole (suffix + head) of ``task``."""
+        graph = self.program.graph
+        fn, mode = self._fused_fn(task, resume, batched, h)
+        if mode == "scan":
+            acts, out = fn(
+                self._stacked_suffix_params(task, resume),
+                self.program.head_params[task],
+                h,
+            )
+            acts = [acts[i] for i in range(graph.depth - resume)]
+        else:
+            acts, out = fn(
+                self._suffix_params(task, resume),
+                self.program.head_params[task],
+                h,
+            )
+        self.dispatch_count += 1
+        path = graph.path(task)
+        for a, d in zip(acts, range(resume, graph.depth)):
+            self._activations[d] = a
+            self._act_owner[d] = path[d]
+        return out
+
+    def _run_suffix_blocks(
+        self, task: int, resume: int, h: jnp.ndarray, batched: bool
+    ) -> jnp.ndarray:
+        """Reference path: one dispatch per block plus one for the head."""
+        graph = self.program.graph
+        path = graph.path(task)
+        block_fn = self._block_fn_batch if batched else self._block_fn
+        head_fn = self._head_fn_batch if batched else self._head_fn
+        for d in range(resume, graph.depth):
+            node = path[d]
+            h = block_fn(d)(self.program.node_params[node], h)
+            self.dispatch_count += 1
+            self._activations[d] = h
+            self._act_owner[d] = node
+        out = head_fn(task)(self.program.head_params[task], h)
+        self.dispatch_count += 1
+        return out
+
     # ------------------------------------------------------------------ run
     def _run_task_impl(
         self,
@@ -152,15 +361,15 @@ class TaskGraphExecutor:
         x: jnp.ndarray,
         stats: ExecutionStats,
         weight: int,
-        block_fn: Callable[[int], Callable],
-        head_fn: Callable[[int], Callable],
+        batched: bool,
     ) -> jnp.ndarray:
         """Shared body of the single-request and batched task execution.
 
         The residency/resume/accounting invariants live ONLY here so the two
         paths cannot drift: ``weight`` is the logical request multiplicity
         scaling the per-request counters (flops/tasks), while load counters
-        stay physical (once per invocation).
+        stay physical (once per invocation).  Accounting is dispatch-mode
+        independent: the fused and per-block paths produce identical stats.
         """
         graph = self.program.graph
         path = graph.path(task)
@@ -174,7 +383,6 @@ class TaskGraphExecutor:
             else:
                 break
 
-        h = self._activations[resume - 1] if resume > 0 else x
         for d in range(graph.depth):
             node = path[d]
             bc = self.program.block_costs[d]
@@ -189,22 +397,24 @@ class TaskGraphExecutor:
                 stats.weight_bytes_loaded += bc.weight_bytes
                 self._resident[d] = node
             else:
+                # Still resident (warm start across groups, or an intra-order
+                # revisit): the load is skipped but the block must execute —
+                # its input activation belongs to the current input.
                 stats.weight_bytes_skipped += bc.weight_bytes
-            h = block_fn(d)(self.program.node_params[node], h)
             stats.blocks_executed += 1
             stats.flops_executed += weight * bc.flops
-            self._activations[d] = h
-            self._act_owner[d] = node
         stats.tasks_run += weight
-        return head_fn(task)(self.program.head_params[task], h)
+
+        h = self._activations[resume - 1] if resume > 0 else x
+        if self._fused:
+            return self._run_suffix_fused(task, resume, h, batched)
+        return self._run_suffix_blocks(task, resume, h, batched)
 
     def run_task(
         self, task: int, x: jnp.ndarray, stats: ExecutionStats
     ) -> jnp.ndarray:
         """Run one task, resuming from the deepest cached shared block."""
-        return self._run_task_impl(
-            task, x, stats, 1, self._block_fn, self._head_fn
-        )
+        return self._run_task_impl(task, x, stats, 1, batched=False)
 
     def run(
         self,
@@ -259,9 +469,7 @@ class TaskGraphExecutor:
         *is* the block-loads-saved of batching.
         """
         w = int(xs.shape[0]) if weight is None else int(weight)
-        return self._run_task_impl(
-            task, xs, stats, w, self._block_fn_batch, self._head_fn_batch
-        )
+        return self._run_task_impl(task, xs, stats, w, batched=True)
 
     def run_batch(
         self,
@@ -286,7 +494,10 @@ class TaskGraphExecutor:
         Returns:
           (per-task batched outputs ``{task: (B, *out_shape)}``, stats).
           With a cold executor the stats equal
-          ``GraphCostModel.predicted_stats(order, batch_size=valid)`` exactly.
+          ``GraphCostModel.predicted_stats(order, batch_size=valid)``
+          exactly; warm (no ``reset`` since a previous group) they equal
+          ``predicted_stats(order, batch_size=valid, resume=state)`` where
+          ``state`` was :meth:`residency_state` before this call.
         """
         self.clear_activations()  # never resume from a previous input
         v = int(xs.shape[0]) if valid is None else int(valid)

@@ -10,7 +10,15 @@ the reproduction numbers are directly comparable with the paper's ratios.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple
+
+# A task-graph block node: (depth, group of tasks sharing it).  The executor
+# and the cost model both key residency by these.
+NodeId = Tuple[int, Tuple[int, ...]]
+# Per-depth resident block (None = slot empty): what
+# TaskGraphExecutor.residency_state() returns and what
+# GraphCostModel.predicted_stats accepts as ``resume``.
+Residency = Sequence[Optional[NodeId]]
 
 
 @dataclasses.dataclass(frozen=True)

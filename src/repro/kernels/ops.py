@@ -2,7 +2,10 @@
 
 Each op normalises layouts (e.g. (B,S,H,D) -> flattened (B*H,S,D) slices for
 attention), handles GQA head grouping, picks block sizes, and exposes an
-``interpret`` flag (True on this CPU container; False on real TPU).
+``interpret`` flag.  For the affinity kernel ``interpret`` defaults to
+``None`` and is resolved from the active backend (Mosaic on TPU, interpreter
+on CPU/GPU); the attention/scan kernels still default to the interpreter
+pending the same treatment on a real TPU target.
 """
 from __future__ import annotations
 
@@ -50,9 +53,13 @@ def pairwise_pearson_dissimilarity(
     feats: jax.Array,   # (K, F) raw representations of K samples
     blk_k: int = 128,
     blk_f: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Standardise rows then run the tiled ``1 - Gram`` kernel (fp32)."""
+    """Standardise rows then run the tiled ``1 - Gram`` kernel (fp32).
+
+    ``interpret=None`` resolves from ``jax.default_backend()`` (Mosaic on
+    TPU, interpreter elsewhere); an explicit bool overrides.
+    """
     z = feats.astype(jnp.float32)
     z = z - jnp.mean(z, axis=-1, keepdims=True)
     z = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)

@@ -11,11 +11,26 @@ VMEM accumulator carried across feature steps.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve an ``interpret`` override against the active backend.
+
+    ``None`` (the default) selects the real Mosaic pipeline on TPU and the
+    interpreter everywhere else (CPU/GPU containers, where the TPU dialect
+    cannot lower) — so the same call sites run fast on TPU without silently
+    interpreting there.  An explicit ``True``/``False`` always wins (tests
+    pin the interpreter for hermetic CPU runs).
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _gram_kernel(zi_ref, zj_ref, o_ref, acc_scr, *, nf: int):
@@ -39,9 +54,14 @@ def pearson_dissimilarity(
     z: jax.Array,          # (K, F) — rows already centered + unit-normalised
     blk_k: int = 128,
     blk_f: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """``1 - Z Z^T`` with VMEM tiling.  Returns (K, K) fp32."""
+    """``1 - Z Z^T`` with VMEM tiling.  Returns (K, K) fp32.
+
+    ``interpret=None`` resolves from the backend (Mosaic on TPU, interpreter
+    elsewhere); pass an explicit bool to override.
+    """
+    interpret = resolve_interpret(interpret)
     k, f = z.shape
     k_pad = (k + blk_k - 1) // blk_k * blk_k
     f_pad = (f + blk_f - 1) // blk_f * blk_f

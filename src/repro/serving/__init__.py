@@ -1,7 +1,7 @@
 """Serving: the Antler multitask engine + batched LM prefill/decode."""
 from repro.serving.batching import (
     ContinuousBatcher, GenRequest, GenResult, RequestGroup,
-    RequestGroupScheduler,
+    RequestGroupScheduler, effective_order, order_groups,
 )
 from repro.serving.engine import (
     LMServer, MultitaskEngine, MultitaskRequest, MultitaskResponse,

@@ -9,7 +9,10 @@
   outcomes are resolved by the engine while a group executes (a task's
   output depends only on the input row, so running a gated-off row and
   dropping its output is exact) — the dynamic analogue of bucketing by gate
-  outcome without re-stacking mid-flight.
+  outcome without re-stacking mid-flight.  With a cost model supplied, the
+  emitted groups are additionally *sequenced* by :func:`order_groups` so
+  consecutive groups hand residency over cheaply — the paper's task-ordering
+  idea lifted one level up, feeding the engine's warm-start pipeline.
 
 * :class:`ContinuousBatcher` — continuous batching for the LM server: a
   minimal production-shaped scheduler where slots in a fixed-size batch are
@@ -35,6 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.constraints import Constraints
+from repro.core.cost_model import GraphCostModel, Residency
+from repro.core.ordering import greedy_2opt_order, optimal_order
 from repro.models.registry import ModelApi
 from repro.sharding.policy import ShardingPolicy, TP_POLICY
 
@@ -134,12 +140,22 @@ class RequestGroupScheduler:
         self,
         requests: Sequence["MultitaskRequest"],
         num_tasks: Optional[int] = None,
+        cost_model: Optional[GraphCostModel] = None,
+        task_order: Optional[Sequence[int]] = None,
+        initial_resident: Optional[Residency] = None,
     ) -> List[RequestGroup]:
         """Partition ``requests`` into padded homogeneous groups.
 
         With ``num_tasks`` given, an explicit all-tasks subset is normalised
         to ``None`` so it shares a group (and its weight loads) with
         ``tasks=None`` requests.
+
+        With ``cost_model`` and ``task_order`` given, the groups come back
+        in the cost-aware inter-group sequence (:func:`order_groups`) that
+        minimises the warm-start boundary loads between consecutive groups;
+        otherwise bucket order is kept.  ``initial_resident`` feeds the
+        engine's current residency in so a warm engine also picks the
+        cheapest first group.
         """
         all_tasks = None if num_tasks is None else frozenset(range(num_tasks))
         buckets: Dict[Tuple, List[Tuple[int, Any, jnp.ndarray]]] = {}
@@ -169,7 +185,101 @@ class RequestGroupScheduler:
                     xs=jnp.stack(rows),
                     valid=take,
                 ))
+        if cost_model is not None and task_order is not None:
+            groups = order_groups(
+                groups, cost_model, task_order, initial_resident
+            )
         return groups
+
+
+# Above this many groups the exact path solvers get expensive; fall back to
+# the greedy + 2-opt heuristic (the matrix is asymmetric either way).
+EXACT_GROUP_ORDERING_LIMIT = 9
+
+
+def effective_order(
+    task_order: Sequence[int], tasks: Optional[FrozenSet[int]]
+) -> List[int]:
+    """The engine's task order filtered to one group's requested subset."""
+    if tasks is None:
+        return list(task_order)
+    return [t for t in task_order if t in tasks]
+
+
+def order_groups(
+    groups: Sequence[RequestGroup],
+    cost_model: GraphCostModel,
+    task_order: Sequence[int],
+    initial_resident: Optional[Residency] = None,
+) -> List[RequestGroup]:
+    """Cost-aware inter-group sequencing for the warm-start pipeline.
+
+    The paper orders *tasks* so consecutive tasks share the longest prefix;
+    this generalises the same idea one level up: consecutive *groups* should
+    hand over residency cheaply.  The boundary cost of running group ``j``
+    right after group ``i`` is the load-only switching cost from ``i``'s
+    last executed task to ``j``'s first (activations never cross groups, so
+    only loads are at stake), weighted by ``j``'s request count — a group of
+    many requests stalling on a cold boundary costs more request-seconds
+    than a singleton.  Each group's internal cost is sequence-independent,
+    so minimising the boundary sum minimises the whole schedule's modelled
+    cost; the matrix goes through the existing ordering machinery (exact
+    Held-Karp for few groups, greedy + 2-opt beyond
+    ``EXACT_GROUP_ORDERING_LIMIT``).
+
+    ``initial_resident`` (the executor's residency before this batch) adds a
+    fixed virtual start node so a warm engine also picks the cheapest *first*
+    group; cold, the first group's cost is group-independent (block costs
+    depend only on depth) and no virtual node is needed.
+    """
+    # Groups executing no tasks (empty requested subset) are residency
+    # no-ops: residency flows through them untouched, so they must not sit
+    # in the cost matrix as free waypoints hiding their neighbours' real
+    # boundary cost.  Order the real groups, append the no-ops at the end.
+    active = [
+        i for i, g in enumerate(groups)
+        if effective_order(task_order, g.tasks)
+    ]
+    inert = [i for i in range(len(groups)) if i not in set(active)]
+    m = len(active)
+    if m <= 1:
+        return [groups[i] for i in active + inert]
+    firsts: List[int] = []
+    lasts: List[int] = []
+    for i in active:
+        eff = effective_order(task_order, groups[i].tasks)
+        firsts.append(eff[0])
+        lasts.append(eff[-1])
+
+    warm = initial_resident is not None and any(
+        r is not None for r in initial_resident
+    )
+    n = m + 1 if warm else m
+    off = 1 if warm else 0
+    c = np.zeros((n, n), dtype=np.float64)
+    for i in range(m):
+        for j in range(m):
+            if i == j:
+                continue
+            c[i + off, j + off] = (
+                groups[active[j]].valid
+                * cost_model.warm_switching_cost(lasts[i], firsts[j])
+            )
+    cons = None
+    if warm:
+        for j in range(m):
+            c[0, j + 1] = groups[active[j]].valid * cost_model.resume_load_cost(
+                initial_resident, firsts[j]
+            )
+        # The virtual start must come first: it precedes every group.
+        cons = Constraints.make(n, precedence=[(0, j + 1) for j in range(m)])
+
+    if n <= EXACT_GROUP_ORDERING_LIMIT:
+        res = optimal_order(c, cons)
+    else:
+        res = greedy_2opt_order(c, cons)
+    seq = [active[g - off] for g in res.order if g - off >= 0]
+    return [groups[i] for i in seq + inert]
 
 
 @dataclasses.dataclass

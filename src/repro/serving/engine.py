@@ -26,7 +26,9 @@ from repro.core.executor import MultitaskProgram, TaskGraphExecutor
 from repro.core.ordering import optimal_order
 from repro.core.types import ExecutionStats, HardwareModel, TPU_V5E
 from repro.models.registry import ModelApi
-from repro.serving.batching import RequestGroup, RequestGroupScheduler
+from repro.serving.batching import (
+    RequestGroup, RequestGroupScheduler, effective_order,
+)
 from repro.sharding.policy import ShardingPolicy, TP_POLICY
 
 
@@ -45,8 +47,14 @@ class MultitaskResponse:
     ``stats`` are the counters of the *execution group* the request was
     served in (``group_size`` requests share one batched pass, so loads
     amortise); ``predicted_seconds`` is this request's per-request share of
-    the group's modelled cost.  With ``group_size == 1`` both reduce to the
-    original single-request semantics.
+    the group's cost **as it actually ran** — for a warm group that means
+    the warm-start counters (loads skipped through cross-group residency),
+    not a cold estimate.  ``warm_weight_bytes_saved`` is the group's total
+    weight bytes *not* loaded because of warmth alone — the cold-minus-warm
+    modelled loads, separating the cross-group saving from the intra-order
+    prefix sharing already counted in ``stats.weight_bytes_skipped``.  With
+    ``group_size == 1`` and a cold engine everything reduces to the original
+    single-request semantics.
     """
 
     outputs: Dict[int, jax.Array]
@@ -54,6 +62,7 @@ class MultitaskResponse:
     order: Tuple[int, ...]
     predicted_seconds: float
     group_size: int = 1
+    warm_weight_bytes_saved: float = 0.0
 
 
 class MultitaskEngine:
@@ -61,6 +70,16 @@ class MultitaskEngine:
 
     ``gates``: {task: fn(outputs_so_far) -> bool} runtime conditions
     implementing conditional constraints.
+
+    ``warm_start`` keeps the executor's weight residency across request
+    groups (and across ``serve_batch`` calls): a group whose first task
+    shares a prefix with the previous group's boundary task skips those
+    loads entirely.  Activations are always invalidated at group boundaries
+    — they belong to the previous group's inputs — so outputs are identical
+    to cold-per-group serving.  ``group_ordering`` sequences the planned
+    groups by the cost model's warm boundary costs (see
+    ``repro.serving.batching.order_groups``); neither flag changes results,
+    only how much gets loaded.
     """
 
     def __init__(
@@ -71,11 +90,15 @@ class MultitaskEngine:
         gates: Optional[Dict[int, Callable[[Dict[int, jax.Array]], bool]]] = None,
         order: Optional[Sequence[int]] = None,
         scheduler: Optional[RequestGroupScheduler] = None,
+        warm_start: bool = True,
+        group_ordering: bool = True,
     ):
         self.program = program
         self.hw = hw
         self.constraints = constraints
         self.gates = gates or {}
+        self.warm_start = warm_start
+        self.group_ordering = group_ordering
         self.cost_model = GraphCostModel(program.graph, program.block_costs, hw)
         if order is None:
             res = optimal_order(self.cost_model.cost_matrix(), constraints)
@@ -85,6 +108,61 @@ class MultitaskEngine:
             raise ValueError("supplied order violates the constraints")
         self.executor = TaskGraphExecutor(program)
         self.scheduler = scheduler or RequestGroupScheduler()
+        # Cumulative counters of the most recent serve_batch call; with no
+        # gates these equal predicted_group_stats(plan_groups(requests))
+        # computed before that call (property-tested).
+        self.last_batch_stats = ExecutionStats()
+
+    # ------------------------------------------------------------- planning
+    def plan_groups(
+        self, requests: Sequence[MultitaskRequest]
+    ) -> List[RequestGroup]:
+        """The exact group plan ``serve_batch`` will execute, in sequence.
+
+        Deterministic, so callers can plan, predict (via
+        :meth:`predicted_group_stats`), and then serve the same requests.
+        """
+        use_order = self.group_ordering
+        return self.scheduler.plan(
+            requests,
+            num_tasks=self.program.graph.num_tasks,
+            cost_model=self.cost_model if use_order else None,
+            task_order=self.order if use_order else None,
+            initial_resident=(
+                self.executor.residency_state()
+                if use_order and self.warm_start else None
+            ),
+        )
+
+    def predicted_group_stats(
+        self, groups: Sequence[RequestGroup]
+    ) -> ExecutionStats:
+        """Cumulative counter prediction for serving ``groups`` in sequence.
+
+        Warm engines carry residency group-to-group (seeded from the
+        executor's *current* residency), cold engines re-predict each group
+        from scratch; tasks outside a group's subset count as skipped.
+        Assumes every gate fires (gate outcomes are input-dependent); with
+        no gates the executor's cumulative counters match this exactly.
+        """
+        plan = []
+        subset_skipped = 0
+        for g in groups:
+            eff = effective_order(self.order, g.tasks)
+            subset_skipped += (len(self.order) - len(eff)) * g.valid
+            plan.append((eff, g.valid))
+        if self.warm_start:
+            stats = self.cost_model.predicted_group_stats(
+                plan, resume=self.executor.residency_state()
+            )
+        else:
+            stats = ExecutionStats()
+            for eff, b in plan:
+                stats = stats.merge(
+                    self.cost_model.predicted_stats(eff, batch_size=b)
+                )
+        stats.tasks_skipped += subset_skipped
+        return stats
 
     def _run_group(
         self, group: RequestGroup
@@ -126,18 +204,42 @@ class MultitaskEngine:
     ) -> List[MultitaskResponse]:
         """Serve many requests via grouped batched execution.
 
-        The scheduler buckets requests into homogeneous padded groups; each
+        The scheduler buckets requests into homogeneous padded groups (and,
+        with group ordering on, sequences them by warm boundary cost); each
         group runs the block-cached executor once with every block vmapped
         over the group, so weight loads amortise across the group's
-        requests.  Responses come back in submission order.
+        requests.  A warm engine keeps residency between groups — only the
+        input-dependent activation caches are dropped at each boundary — so
+        consecutive groups sharing a prefix skip those weight loads too.
+        Responses come back in submission order.
         """
-        groups = self.scheduler.plan(
-            requests, num_tasks=self.program.graph.num_tasks
-        )
+        groups = self.plan_groups(requests)
         responses: List[Optional[MultitaskResponse]] = [None] * len(requests)
+        self.last_batch_stats = ExecutionStats()
         for group in groups:
-            self.executor.reset()  # cold per group: stats match predictions
+            if self.warm_start:
+                # Warm boundary: keep residency, never the previous group's
+                # activations (they belong to different inputs).
+                self.executor.clear_activations()
+            else:
+                self.executor.reset()  # cold per group (reference semantics)
+            eff = effective_order(self.order, group.tasks)
+            warm_saved = 0.0
+            if self.warm_start:
+                warm_pred = self.cost_model.predicted_stats(
+                    eff, batch_size=group.valid,
+                    resume=self.executor.residency_state(),
+                )
+                cold_pred = self.cost_model.predicted_stats(
+                    eff, batch_size=group.valid
+                )
+                warm_saved = (
+                    cold_pred.weight_bytes_loaded - warm_pred.weight_bytes_loaded
+                )
             per_request, stats = self._run_group(group)
+            self.last_batch_stats = self.last_batch_stats.merge(stats)
+            # Per-request share of the group's cost as executed (warm stats
+            # for a warm group) — not a cold-group estimate.
             per_req_seconds = stats.seconds(self.hw) / max(group.valid, 1)
             for slot, idx in enumerate(group.indices):
                 responses[idx] = MultitaskResponse(
@@ -148,6 +250,7 @@ class MultitaskEngine:
                     order=self.order,
                     predicted_seconds=per_req_seconds,
                     group_size=group.valid,
+                    warm_weight_bytes_saved=warm_saved,
                 )
         assert all(r is not None for r in responses)
         return responses  # type: ignore[return-value]

@@ -7,7 +7,11 @@ environments):
 * every submitted request appears in exactly one group;
 * groups are homogeneous — one task subset and one input shape per group;
 * group widths come from the scheduler's allowed batch shapes, and padding
-  never changes served results.
+  never changes served results;
+* warm multi-group serving (cross-group residency reuse + cost-aware group
+  ordering) returns the same outputs as the cold-per-group path, and the
+  warm engine's cumulative counters equal
+  ``MultitaskEngine.predicted_group_stats`` of its plan exactly.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -109,6 +113,38 @@ def check_padding_preserves_results(requests):
                 rtol=1e-5, atol=1e-6)
 
 
+def check_warm_multigroup_equivalence(requests):
+    """Warm multi-group serving == cold-per-group serving, and the warm
+    engine's cumulative counters match ``predicted_group_stats`` exactly.
+
+    Serves the same stream twice so the second batch starts warm from the
+    first's residency (the persistent-engine case).
+    """
+    warm = MultitaskEngine(PROGRAM, hw=MSP430,
+                           scheduler=RequestGroupScheduler(batch_shapes=(1, 4)))
+    cold = MultitaskEngine(PROGRAM, hw=MSP430, warm_start=False,
+                           group_ordering=False,
+                           scheduler=RequestGroupScheduler(batch_shapes=(1, 4)))
+    for _round in range(2):
+        pred = warm.predicted_group_stats(warm.plan_groups(requests))
+        warm_resp = warm.serve_batch(requests)
+        cold_resp = cold.serve_batch(requests)
+        assert warm.last_batch_stats == pred
+        # Warmth + ordering only remove loads, never add them.
+        assert (warm.last_batch_stats.weight_bytes_loaded
+                <= cold.last_batch_stats.weight_bytes_loaded)
+        # Per-request counters are schedule-independent.
+        assert warm.last_batch_stats.flops_executed == \
+            cold.last_batch_stats.flops_executed
+        assert warm.last_batch_stats.tasks_run == cold.last_batch_stats.tasks_run
+        for rw, rc in zip(warm_resp, cold_resp):
+            assert set(rw.outputs) == set(rc.outputs)
+            for t in rw.outputs:
+                np.testing.assert_allclose(
+                    np.asarray(rw.outputs[t]), np.asarray(rc.outputs[t]),
+                    rtol=1e-5, atol=1e-6)
+
+
 def test_scheduler_invariants_fixed_seeds():
     rng = np.random.default_rng(0)
     for trial in range(25):
@@ -159,6 +195,15 @@ def test_padding_preserves_results_fixed_seed():
     check_padding_preserves_results(_requests_from_spec(spec, rng))
 
 
+def test_warm_multigroup_equivalence_fixed_seeds():
+    rng = np.random.default_rng(3)
+    for _trial in range(4):
+        n = int(rng.integers(2, 10))
+        spec = [(int(rng.integers(0, len(SUBSET_CHOICES))), False)
+                for _ in range(n)]
+        check_warm_multigroup_equivalence(_requests_from_spec(spec, rng))
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=30, deadline=None)
     @given(
@@ -184,3 +229,15 @@ if HAVE_HYPOTHESIS:
     def test_padding_preserves_results_hypothesis(spec, data_seed):
         rng = np.random.default_rng(data_seed)
         check_padding_preserves_results(_requests_from_spec(spec, rng))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        spec=st.lists(
+            st.tuples(st.integers(0, len(SUBSET_CHOICES) - 1), st.just(False)),
+            min_size=1, max_size=8,
+        ),
+        data_seed=st.integers(0, 2**16),
+    )
+    def test_warm_multigroup_equivalence_hypothesis(spec, data_seed):
+        rng = np.random.default_rng(data_seed)
+        check_warm_multigroup_equivalence(_requests_from_spec(spec, rng))
