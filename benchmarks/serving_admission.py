@@ -1,0 +1,234 @@
+"""Admission-policy sweep: window vs. greedy vs. affinity on a Poisson trace.
+
+A Poisson arrival trace of multitask requests (task subsets cycling through
+the two subtrees of the benchmark graph — the adversarial arrival order for
+warm hand-over) is served through a :class:`ServingSession` under three
+scheduling policies, all on warm engines:
+
+* **greedy** — ``GreedyBatchPolicy`` driven one-shot (submit the whole
+  trace, then drain): the pre-session ``serve_batch`` pipeline — one big
+  planning batch with cost-aware group ordering, at the price of every
+  request waiting for the end of the trace before anything is admitted;
+* **window** — ``WindowPolicy``: admit by max-wait / max-group-size in
+  **arrival order**, group ordering off — the classic batching-window
+  baseline whose grouping follows the (adversarial) arrival sequence;
+* **affinity** — ``AffinityPolicy`` + per-plan order re-solving
+  (``EnginePolicy.resolve_order_per_plan``): among pending buckets, admit
+  the one whose subset costs least to resume from the executor's *current*
+  residency, and re-solve each group's internal task order seeded with that
+  residency.
+
+Checks run on every configuration (dry-run included):
+
+* every policy's outputs match sequential single-request serving (allclose);
+* every session's cumulative executed counters equal its incremental
+  cost-model prediction **exactly** (no gates on these engines);
+* the gate: affinity admission loads **>= 1.2x** fewer weight bytes than
+  the arrival-order window baseline.
+
+The trace is simulated time (a deterministic injected clock), so admission
+waits and the load counters are exact and reproducible — wall-clock noise
+cannot flake the gate.  Machine-readable results land in the
+``admission_sweep`` section of ``BENCH_serving.json``.
+
+Usage: ``PYTHONPATH=src python benchmarks/serving_admission.py [--dry-run]``
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serving_admission.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.common import emit, update_bench_json
+from benchmarks.serving_batch import build_program
+from benchmarks.serving_groups import SUBSETS
+from repro.core import MSP430
+from repro.serving import (
+    AffinityPolicy, EnginePolicy, GreedyBatchPolicy, MultitaskEngine,
+    MultitaskRequest, RequestGroupScheduler, WindowPolicy,
+)
+
+LOAD_GATE = 1.2  # affinity must load >= this factor fewer bytes than window
+
+
+class SimClock:
+    """Deterministic simulated clock driven by the arrival trace."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def poisson_trace(n_requests: int, dim: int, rate: float, seed: int = 3):
+    """(arrival_time, request) pairs: Poisson arrivals, cycling subsets."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    reqs = [
+        MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(dim,)), jnp.float32),
+            tasks=SUBSETS[i % len(SUBSETS)],
+        )
+        for i in range(n_requests)
+    ]
+    return list(zip(arrivals.tolist(), reqs))
+
+
+def run_policy(name, prog, trace, engine_policy, shapes, one_shot=False,
+               settle=0.0):
+    """Serve the trace through a session; returns (session, responses).
+
+    Arrival-driven by default: the session pumps (``step()``) at every
+    arrival, so windowed/affinity policies fire on their own thresholds.
+    ``one_shot=True`` reproduces the pre-session pipeline instead: the
+    whole trace is submitted, then a single end-of-trace drain plans
+    everything as one batch (admission waits span to the trace end).
+
+    ``settle`` is how far past the last arrival the clock advances before
+    the final drain — the admission window for windowed policies, so tail
+    requests are stamped with the wait they would really have aged out at,
+    not an arbitrary end-of-benchmark jump; 0 for one-shot (the pipeline
+    fires the moment the trace completes).
+    """
+    eng = MultitaskEngine(
+        prog, hw=MSP430, policy=engine_policy,
+        scheduler=RequestGroupScheduler(batch_shapes=shapes),
+    )
+    clock = SimClock()
+    session = eng.session(clock=clock)
+    futures = []
+    for t, req in trace:
+        clock.t = t
+        futures.append(session.submit(req))
+        if not one_shot:
+            session.step()
+    # Trace exhausted: advance to when the tail would age out, then drain.
+    clock.t = trace[-1][0] + settle
+    session.drain()
+    assert all(f.done() for f in futures)
+    return session, [f.result() for f in futures]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes (the sweep is deterministic either way)")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="block width (default 256, dry-run 16)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default 64, dry-run 24)")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (requests per simulated second)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable results file ('' disables)")
+    args = ap.parse_args(argv)
+
+    dim = args.dim or (16 if args.dry_run else 256)
+    n_req = args.requests or (24 if args.dry_run else 64)
+    shapes = (1, 2, 4)
+    window = 0.25       # max admission wait, simulated seconds
+    group_cap = 4
+
+    prog = build_program(dim)
+    trace = poisson_trace(n_req, dim, args.rate)
+
+    policies = {
+        # The pre-session one-shot pipeline: the whole trace submitted,
+        # then one greedy planning batch with group ordering (run_policy
+        # drives this entry one_shot so greedy actually sees the full
+        # request list, not per-arrival singletons).
+        "greedy": EnginePolicy(scheduling=GreedyBatchPolicy()),
+        # Arrival-order grouping: the admission baseline the gate measures
+        # against (no cost-aware sequencing anywhere).
+        "window": EnginePolicy(
+            scheduling=WindowPolicy(max_wait=window, max_group_size=group_cap),
+            group_ordering=False,
+        ),
+        # Residency-aware admission + per-plan order re-solving.
+        "affinity": EnginePolicy(
+            scheduling=AffinityPolicy(
+                max_group_size=group_cap, min_pending=2 * group_cap,
+                max_wait=window,
+            ),
+            group_ordering=False,
+            resolve_order_per_plan=True,
+        ),
+    }
+
+    # Sequential single-request reference for output equivalence.
+    solo = MultitaskEngine(
+        prog, hw=MSP430, warm_start=False, group_ordering=False,
+        scheduler=RequestGroupScheduler(batch_shapes=(1,)),
+    )
+    solo_resp = [solo.serve(r) for _t, r in trace]
+
+    print("name,us_per_call,derived")
+    rows = {}
+    for name, engine_policy in policies.items():
+        session, resp = run_policy(
+            name, prog, trace, engine_policy, shapes,
+            one_shot=(name == "greedy"),
+            settle=(0.0 if name == "greedy" else window),
+        )
+        # Counters must match the incremental prediction exactly (no gates).
+        assert session.stats == session.predicted, (
+            f"{name}: executed counters diverge from the incremental "
+            f"prediction\n  got  {session.stats}\n  want {session.predicted}")
+        for r, s in zip(resp, solo_resp):
+            assert set(r.outputs) == set(s.outputs)
+            for t in r.outputs:
+                np.testing.assert_allclose(
+                    np.asarray(r.outputs[t]), np.asarray(s.outputs[t]),
+                    rtol=1e-5, atol=1e-6)
+        stats = session.stats
+        mean_wait = session.mean_admission_wait
+        max_wait = session.max_admission_wait
+        per_req_modelled = stats.seconds(MSP430) / n_req
+        emit(f"serve_admission_{name}", per_req_modelled * 1e6,
+             f"modelled_per_request;groups={session.groups_executed};"
+             f"weight_bytes_loaded={stats.weight_bytes_loaded:.0f};"
+             f"mean_wait={mean_wait * 1e3:.1f}ms")
+        rows[name] = {
+            "weight_bytes_loaded": stats.weight_bytes_loaded,
+            "weight_bytes_skipped": stats.weight_bytes_skipped,
+            "groups": session.groups_executed,
+            "admission_rounds": session.admission_rounds,
+            "mean_admission_wait_seconds": mean_wait,
+            "max_admission_wait_seconds": max_wait,
+            "modelled_per_request_seconds": per_req_modelled,
+            "plan_seconds": session.plan_seconds,
+        }
+
+    reduction = (
+        rows["window"]["weight_bytes_loaded"]
+        / max(rows["affinity"]["weight_bytes_loaded"], 1e-9)
+    )
+    rows["affinity_load_reduction_vs_window"] = reduction
+    if args.json:
+        update_bench_json(args.json, "admission_sweep", {
+            "dim": dim, "requests": n_req, "rate": args.rate,
+            "dry_run": bool(args.dry_run), "batch_shapes": list(shapes),
+            "window_seconds": window, "max_group_size": group_cap,
+            "load_gate": LOAD_GATE, "rows": rows,
+        })
+    if reduction < LOAD_GATE:
+        print(f"FAIL: affinity load reduction {reduction:.2f}x < "
+              f"{LOAD_GATE}x vs arrival-order window grouping",
+              file=sys.stderr)
+        return 1
+    print(f"# affinity weight-load reduction vs arrival-order window: "
+          f"{reduction:.2f}x (>= {LOAD_GATE}x); "
+          f"mean wait window {rows['window']['mean_admission_wait_seconds'] * 1e3:.0f}ms "
+          f"vs affinity {rows['affinity']['mean_admission_wait_seconds'] * 1e3:.0f}ms")
+    print("# equivalence + exact-counter checks passed for all policies")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,3 +12,6 @@ python benchmarks/serving_batch.py --dry-run
 # Multi-group warm-start sweep: warm-vs-cold equivalence, exact counters,
 # fused single-dispatch, and the >= 1.5x load-reduction gate.
 python benchmarks/serving_groups.py --dry-run
+# Admission-policy sweep: sessioned-vs-sequential equivalence, exact
+# incremental counters, and the >= 1.2x affinity-vs-window load gate.
+python benchmarks/serving_admission.py --dry-run

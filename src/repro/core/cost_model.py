@@ -224,23 +224,108 @@ class GraphCostModel:
         ``plan`` is the executed schedule: one ``(order, batch_size)`` entry
         per group, in execution sequence, where ``order`` lists the tasks
         that group actually runs (the engine's task order filtered to the
-        group's subset) and ``batch_size`` its valid (unpadded) request
-        count.  Residency carries from each group into the next —
-        activations do not — so this predicts exactly what the warm-start
-        engine's cumulative counters will be.  ``resume`` seeds the initial
-        residency (a persistent engine warm from earlier batches).
+        group's subset — or that group's re-solved per-plan order) and
+        ``batch_size`` its valid (unpadded) request count.  Residency
+        carries from each group into the next — activations do not — so
+        this predicts exactly what the warm-start engine's cumulative
+        counters will be.  ``resume`` seeds the initial residency (a
+        persistent engine warm from earlier batches).
+
+        Sessions that admit groups over time use the incremental form,
+        :meth:`plan_predictor`, which this method is a one-shot wrapper
+        around.
         """
-        resident: List[Optional[NodeId]] = (
-            list(resume) if resume is not None else [None] * self.graph.depth
-        )
-        if len(resident) != self.graph.depth:
-            raise ValueError(
-                f"resume has {len(resident)} slots, expected {self.graph.depth}"
-            )
-        stats = ExecutionStats()
+        predictor = self.plan_predictor(resume=resume)
         for order, batch_size in plan:
-            self._predict_into(order, int(batch_size), resident, stats)
-        return stats
+            predictor.append(order, int(batch_size))
+        return predictor.stats
+
+    def plan_predictor(
+        self,
+        resume: Optional[Residency] = None,
+        carry_residency: bool = True,
+    ) -> "PlanPredictor":
+        """An incremental predictor for incrementally-admitted plans."""
+        return PlanPredictor(self, resume=resume, carry_residency=carry_residency)
+
+    def residency_after(
+        self, order: Sequence[int], resident: Optional[Residency] = None
+    ) -> Tuple[Optional[NodeId], ...]:
+        """Residency left behind by executing ``order``.
+
+        Every task's path covers all depths, so after a non-empty order the
+        resident block at each depth belongs to the *last* executed task;
+        an empty order leaves ``resident`` untouched.  This is what planners
+        (per-plan order re-solving, admission policies) use to simulate the
+        executor's state between groups without touching the executor.
+        """
+        if order:
+            return tuple(self.graph.path(order[-1]))
+        if resident is None:
+            return (None,) * self.graph.depth
+        return tuple(resident)
+
+
+class PlanPredictor:
+    """Incremental counter prediction for incrementally-admitted plans.
+
+    A :class:`~repro.serving.session.ServingSession` does not know its full
+    group schedule up front — groups are admitted over time by a scheduling
+    policy.  This object is the incremental form of
+    :meth:`GraphCostModel.predicted_group_stats`: call :meth:`append` with
+    each group's ``(order, batch_size)`` in execution sequence and the
+    tracked residency carries group-to-group exactly as the warm engine's
+    executor does.  ``carry_residency=False`` re-predicts every group from a
+    cold slate (the ``warm_start=False`` engine's semantics).
+
+    ``stats`` is the cumulative prediction so far; :meth:`append` returns
+    the per-group delta.
+    """
+
+    def __init__(
+        self,
+        model: GraphCostModel,
+        resume: Optional[Residency] = None,
+        carry_residency: bool = True,
+    ):
+        self.model = model
+        self.carry_residency = carry_residency
+        depth = model.graph.depth
+        self._resident: List[Optional[NodeId]] = (
+            list(resume) if resume is not None else [None] * depth
+        )
+        if len(self._resident) != depth:
+            raise ValueError(
+                f"resume has {len(self._resident)} slots, expected {depth}"
+            )
+        self.stats = ExecutionStats()
+        self.groups = 0
+
+    @property
+    def residency(self) -> Tuple[Optional[NodeId], ...]:
+        """The tracked residency after every appended group."""
+        return tuple(self._resident)
+
+    def append(
+        self,
+        order: Sequence[int],
+        batch_size: int = 1,
+        extra_tasks_skipped: int = 0,
+    ) -> ExecutionStats:
+        """Account one more admitted group; returns that group's delta.
+
+        ``extra_tasks_skipped`` lets callers fold in schedule-level skips
+        (engine tasks outside the group's requested subset) so the
+        cumulative prediction matches the engine's counters field-for-field.
+        """
+        if not self.carry_residency:
+            self._resident = [None] * self.model.graph.depth
+        delta = ExecutionStats()
+        self.model._predict_into(order, int(batch_size), self._resident, delta)
+        delta.tasks_skipped += int(extra_tasks_skipped)
+        self.stats = self.stats.merge(delta)
+        self.groups += 1
+        return delta
 
 
 def uniform_block_costs(

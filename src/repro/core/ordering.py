@@ -359,6 +359,69 @@ def greedy_2opt_order(
     )
 
 
+# --------------------------------------------------------------------------
+# Subset re-solving (per-plan orders for the serving engine)
+# --------------------------------------------------------------------------
+
+def solve_suborder(
+    cost: np.ndarray,
+    tasks: Sequence[int],
+    start_costs: Optional[Sequence[float]] = None,
+    constraints: Optional[Constraints] = None,
+    exact_limit: int = 9,
+) -> List[int]:
+    """Order a task *subset* of an existing cost matrix, warm-seeded.
+
+    The serving engine solves one global order at startup, but a request
+    group that wants only a subset of tasks — executed on an engine whose
+    residency came from whatever ran before — can have a better internal
+    order than the global order filtered to the subset.  This restricts
+    ``cost`` to ``tasks``, keeps the precedence pairs of ``constraints``
+    that fall entirely inside the subset, and (when ``start_costs`` is
+    given, one entry per subset task) prepends a fixed virtual start node
+    whose outgoing edges are those costs — the residency-aware "which task
+    do we begin with" term, mirroring ``order_groups``'s warm start node
+    one level down.
+
+    Solved exactly (:func:`optimal_order`) up to ``exact_limit`` nodes,
+    greedy + 2-opt beyond.  Returns the subset tasks in execution order
+    (the virtual node stripped); a subset of one task is returned as-is.
+    """
+    tasks = [int(t) for t in tasks]
+    m = len(tasks)
+    if m <= 1:
+        return list(tasks)
+    if start_costs is not None and len(start_costs) != m:
+        raise ValueError(
+            f"{len(start_costs)} start costs for {m} subset tasks"
+        )
+    idx = {t: i for i, t in enumerate(tasks)}
+    if len(idx) != m:
+        raise ValueError(f"subset contains duplicate tasks: {tasks!r}")
+    off = 1 if start_costs is not None else 0
+    n = m + off
+    c = np.zeros((n, n), dtype=np.float64)
+    for i, a in enumerate(tasks):
+        for j, b in enumerate(tasks):
+            if i != j:
+                c[i + off, j + off] = float(cost[a, b])
+    prec: List[Tuple[int, int]] = []
+    if start_costs is not None:
+        for j in range(m):
+            c[0, j + 1] = float(start_costs[j])
+            prec.append((0, j + 1))  # the virtual start precedes everything
+    if constraints is not None:
+        for (a, b) in constraints.precedence:
+            if a in idx and b in idx:
+                prec.append((idx[a] + off, idx[b] + off))
+    cons = Constraints.make(n, precedence=prec) if prec else None
+    if n <= exact_limit:
+        res = optimal_order(c, cons)
+    else:
+        res = greedy_2opt_order(c, cons)
+    return [tasks[v - off] for v in res.order if v - off >= 0]
+
+
 def optimal_order(
     cost: np.ndarray,
     constraints: Optional[Constraints] = None,

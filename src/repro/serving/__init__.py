@@ -1,8 +1,54 @@
-"""Serving: the Antler multitask engine + batched LM prefill/decode."""
+"""Serving: the Antler multitask engine, session-based admission, and the
+batched LM prefill/decode path.
+
+The task-graph surface is session-first: open a ``ServingSession`` on a
+``MultitaskEngine`` (``engine.session()``), ``submit()`` requests over time
+under a pluggable ``SchedulingPolicy``, and resolve ``MultitaskFuture``s.
+``serve`` / ``serve_batch`` remain as one-shot wrappers over the same
+machinery; ``serve_many`` is deprecated.
+"""
 from repro.serving.batching import (
     ContinuousBatcher, GenRequest, GenResult, RequestGroup,
-    RequestGroupScheduler, effective_order, order_groups,
+    RequestGroupScheduler, effective_order, normalize_subset, order_groups,
 )
 from repro.serving.engine import (
-    LMServer, MultitaskEngine, MultitaskRequest, MultitaskResponse,
+    GroupExecution, LMServer, MultitaskEngine, MultitaskRequest,
+    MultitaskResponse,
 )
+from repro.serving.policies import (
+    AffinityPolicy, EnginePolicy, GreedyBatchPolicy, SchedulingPolicy,
+    WindowPolicy,
+)
+from repro.serving.session import (
+    AdmissionQueue, MultitaskFuture, PendingRequest, ServingSession,
+)
+
+__all__ = [
+    # engine + request/response surface
+    "MultitaskEngine",
+    "MultitaskRequest",
+    "MultitaskResponse",
+    "GroupExecution",
+    # sessions
+    "ServingSession",
+    "MultitaskFuture",
+    "AdmissionQueue",
+    "PendingRequest",
+    # policies
+    "EnginePolicy",
+    "SchedulingPolicy",
+    "GreedyBatchPolicy",
+    "WindowPolicy",
+    "AffinityPolicy",
+    # request grouping
+    "RequestGroup",
+    "RequestGroupScheduler",
+    "effective_order",
+    "normalize_subset",
+    "order_groups",
+    # LM serving path
+    "LMServer",
+    "ContinuousBatcher",
+    "GenRequest",
+    "GenResult",
+]

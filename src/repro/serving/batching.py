@@ -55,6 +55,25 @@ if TYPE_CHECKING:  # avoid a module cycle with repro.serving.engine
 DEFAULT_BATCH_SHAPES = (1, 4, 16, 64)
 
 
+def normalize_subset(
+    tasks: Optional[Sequence[int]], num_tasks: Optional[int] = None
+) -> Optional[FrozenSet[int]]:
+    """A request's task subset in bucket-key form.
+
+    ``None`` for all-tasks — implicit, or explicit when ``num_tasks`` is
+    known — so full requests share a group (and its weight loads) however
+    they were spelled; a frozenset otherwise.  The single normalization
+    both the scheduler's bucketing and admission policies key on: they must
+    agree, or a policy would score buckets that never actually form.
+    """
+    if tasks is None:
+        return None
+    subset = frozenset(int(t) for t in tasks)
+    if num_tasks is not None and subset == frozenset(range(num_tasks)):
+        return None
+    return subset
+
+
 @dataclasses.dataclass
 class RequestGroup:
     """One homogeneous, padded execution group for ``run_batch``.
@@ -67,6 +86,10 @@ class RequestGroup:
         scheduler's padded batch shapes; rows ``valid:`` repeat the last real
         row and are dropped from outputs and logical accounting.
       valid: number of real leading rows (``len(requests)``).
+      order: the group's resolved execution order, set by the engine's
+        per-plan order re-solving pass (``EnginePolicy.resolve_order_per_plan``);
+        ``None`` means "the engine's global order filtered to ``tasks``" —
+        the default semantics every pre-session caller gets.
     """
 
     indices: Tuple[int, ...]
@@ -74,6 +97,7 @@ class RequestGroup:
     tasks: Optional[FrozenSet[int]]
     xs: jnp.ndarray
     valid: int
+    order: Optional[Tuple[int, ...]] = None
 
     @property
     def padding(self) -> int:
@@ -157,16 +181,10 @@ class RequestGroupScheduler:
         engine's current residency in so a warm engine also picks the
         cheapest first group.
         """
-        all_tasks = None if num_tasks is None else frozenset(range(num_tasks))
         buckets: Dict[Tuple, List[Tuple[int, Any, jnp.ndarray]]] = {}
         for i, req in enumerate(requests):
             x = jnp.asarray(req.x)
-            subset = (
-                None if req.tasks is None
-                else frozenset(int(t) for t in req.tasks)
-            )
-            if subset is not None and subset == all_tasks:
-                subset = None
+            subset = normalize_subset(req.tasks, num_tasks)
             key = (subset, tuple(x.shape), str(x.dtype))
             buckets.setdefault(key, []).append((i, req, x))
 
@@ -236,10 +254,13 @@ def order_groups(
     # no-ops: residency flows through them untouched, so they must not sit
     # in the cost matrix as free waypoints hiding their neighbours' real
     # boundary cost.  Order the real groups, append the no-ops at the end.
-    active = [
-        i for i, g in enumerate(groups)
-        if effective_order(task_order, g.tasks)
-    ]
+    def group_eff(g: RequestGroup) -> List[int]:
+        # A pre-resolved per-plan order wins over the filtered global order.
+        if g.order is not None:
+            return list(g.order)
+        return effective_order(task_order, g.tasks)
+
+    active = [i for i, g in enumerate(groups) if group_eff(g)]
     inert = [i for i in range(len(groups)) if i not in set(active)]
     m = len(active)
     if m <= 1:
@@ -247,7 +268,7 @@ def order_groups(
     firsts: List[int] = []
     lasts: List[int] = []
     for i in active:
-        eff = effective_order(task_order, groups[i].tasks)
+        eff = group_eff(groups[i])
         firsts.append(eff[0])
         lasts.append(eff[-1])
 

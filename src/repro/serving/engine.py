@@ -14,7 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import (
+    TYPE_CHECKING, Any, Callable, Dict, FrozenSet, List, Optional, Sequence,
+    Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -23,13 +27,18 @@ import numpy as np
 from repro.core.constraints import Constraints
 from repro.core.cost_model import GraphCostModel
 from repro.core.executor import MultitaskProgram, TaskGraphExecutor
-from repro.core.ordering import optimal_order
+from repro.core.ordering import optimal_order, solve_suborder
 from repro.core.types import ExecutionStats, HardwareModel, TPU_V5E
 from repro.models.registry import ModelApi
 from repro.serving.batching import (
-    RequestGroup, RequestGroupScheduler, effective_order,
+    RequestGroup, RequestGroupScheduler, effective_order, normalize_subset,
 )
+from repro.serving.policies import EnginePolicy
 from repro.sharding.policy import ShardingPolicy, TP_POLICY
+
+if TYPE_CHECKING:  # session imports engine; keep the runtime import lazy
+    from repro.serving.policies import SchedulingPolicy
+    from repro.serving.session import ServingSession
 
 
 @dataclasses.dataclass
@@ -46,15 +55,27 @@ class MultitaskResponse:
 
     ``stats`` are the counters of the *execution group* the request was
     served in (``group_size`` requests share one batched pass, so loads
-    amortise); ``predicted_seconds`` is this request's per-request share of
-    the group's cost **as it actually ran** — for a warm group that means
-    the warm-start counters (loads skipped through cross-group residency),
-    not a cold estimate.  ``warm_weight_bytes_saved`` is the group's total
-    weight bytes *not* loaded because of warmth alone — the cold-minus-warm
-    modelled loads, separating the cross-group saving from the intra-order
-    prefix sharing already counted in ``stats.weight_bytes_skipped``.  With
-    ``group_size == 1`` and a cold engine everything reduces to the original
-    single-request semantics.
+    amortise); each response in a group carries its **own**
+    ``dataclasses.replace`` copy, so group-mates never share a mutable
+    counter object.  ``predicted_seconds`` is this request's per-request
+    share of the group's cost **as it actually ran** — for a warm group
+    that means the warm-start counters (loads skipped through cross-group
+    residency), not a cold estimate.  ``warm_weight_bytes_saved`` is the
+    group's total weight bytes *not* loaded because of warmth alone — the
+    cold-minus-warm modelled loads, separating the cross-group saving from
+    the intra-order prefix sharing already counted in
+    ``stats.weight_bytes_skipped``.
+
+    ``order`` is the engine's *global* task order (solved once at startup);
+    ``effective_order`` is the sequence the request's group **actually
+    ran** — the global order filtered to the group's task subset, or the
+    group's re-solved per-plan order when
+    ``EnginePolicy.resolve_order_per_plan`` is on.  ``stats`` always
+    describe the effective order's execution, so consumers correlating
+    counters with a task sequence must read ``effective_order``, not
+    ``order``.  With ``group_size == 1``, a cold engine, and an all-tasks
+    request, everything reduces to the original single-request semantics
+    (and ``effective_order == order``).
     """
 
     outputs: Dict[int, jax.Array]
@@ -63,6 +84,27 @@ class MultitaskResponse:
     predicted_seconds: float
     group_size: int = 1
     warm_weight_bytes_saved: float = 0.0
+    effective_order: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class GroupExecution:
+    """One executed request group — the session's unit of completed work.
+
+    ``outputs`` holds the per-slot (valid rows only) task outputs;
+    ``stats`` the executed counters of this group alone; ``predicted`` the
+    cost model's all-gates-fire prediction for the same group computed from
+    the executor's residency immediately before execution (the incremental
+    form of ``predicted_group_stats`` — merging the per-group predictions
+    of a schedule equals the one-shot prediction of the whole schedule).
+    """
+
+    group: RequestGroup
+    eff: Tuple[int, ...]
+    outputs: List[Dict[int, jax.Array]]
+    stats: ExecutionStats
+    predicted: ExecutionStats
+    warm_saved: float
 
 
 class MultitaskEngine:
@@ -71,15 +113,31 @@ class MultitaskEngine:
     ``gates``: {task: fn(outputs_so_far) -> bool} runtime conditions
     implementing conditional constraints.
 
-    ``warm_start`` keeps the executor's weight residency across request
-    groups (and across ``serve_batch`` calls): a group whose first task
-    shares a prefix with the previous group's boundary task skips those
-    loads entirely.  Activations are always invalidated at group boundaries
-    — they belong to the previous group's inputs — so outputs are identical
-    to cold-per-group serving.  ``group_ordering`` sequences the planned
-    groups by the cost model's warm boundary costs (see
-    ``repro.serving.batching.order_groups``); neither flag changes results,
-    only how much gets loaded.
+    Everything schedule-shaped is configured through one
+    :class:`~repro.serving.policies.EnginePolicy` value (``policy``):
+
+    * ``policy.warm_start`` keeps the executor's weight residency across
+      request groups (and across ``serve_batch`` calls): a group whose
+      first task shares a prefix with the previous group's boundary task
+      skips those loads entirely.  Activations are always invalidated at
+      group boundaries — they belong to the previous group's inputs — so
+      outputs are identical to cold-per-group serving.
+    * ``policy.group_ordering`` sequences the planned groups by the cost
+      model's warm boundary costs (``repro.serving.batching.order_groups``).
+    * ``policy.resolve_order_per_plan`` re-solves each group's *internal*
+      task order seeded with the residency the engine will have when the
+      group runs (see :meth:`plan_groups`).
+    * ``policy.scheduling`` is the admission policy sessions (and the
+      one-shot wrappers' internal sessions) run under.
+
+    None of these change results, only how much gets loaded.  The
+    ``warm_start`` / ``group_ordering`` / ``scheduler`` keyword arguments
+    are retained as conveniences that override the corresponding
+    ``EnginePolicy`` field.
+
+    Long-lived serving goes through :meth:`session` (async admission,
+    futures, planning overlapped with execution); ``serve`` /
+    ``serve_batch`` are thin wrappers that run a one-shot session.
     """
 
     def __init__(
@@ -90,40 +148,103 @@ class MultitaskEngine:
         gates: Optional[Dict[int, Callable[[Dict[int, jax.Array]], bool]]] = None,
         order: Optional[Sequence[int]] = None,
         scheduler: Optional[RequestGroupScheduler] = None,
-        warm_start: bool = True,
-        group_ordering: bool = True,
+        warm_start: Optional[bool] = None,
+        group_ordering: Optional[bool] = None,
+        policy: Optional[EnginePolicy] = None,
     ):
         self.program = program
         self.hw = hw
         self.constraints = constraints
         self.gates = gates or {}
-        self.warm_start = warm_start
-        self.group_ordering = group_ordering
+        policy = policy if policy is not None else EnginePolicy()
+        overrides: Dict[str, Any] = {}
+        if warm_start is not None:
+            overrides["warm_start"] = bool(warm_start)
+        if group_ordering is not None:
+            overrides["group_ordering"] = bool(group_ordering)
+        if scheduler is not None:
+            overrides["scheduler"] = scheduler
+        if overrides:
+            policy = dataclasses.replace(policy, **overrides)
+        if policy.scheduler is None:
+            # Fold the default in so engine.policy alone reconstructs the
+            # engine's full scheduling behavior.
+            policy = dataclasses.replace(
+                policy, scheduler=RequestGroupScheduler()
+            )
+        self.policy = policy
         self.cost_model = GraphCostModel(program.graph, program.block_costs, hw)
+        self._cost_matrix = self.cost_model.cost_matrix()
         if order is None:
-            res = optimal_order(self.cost_model.cost_matrix(), constraints)
+            res = optimal_order(self._cost_matrix, constraints)
             order = res.order
         self.order = tuple(order)
         if constraints is not None and not constraints.is_valid_order(self.order):
             raise ValueError("supplied order violates the constraints")
         self.executor = TaskGraphExecutor(program)
-        self.scheduler = scheduler or RequestGroupScheduler()
         # Cumulative counters of the most recent serve_batch call; with no
-        # gates these equal predicted_group_stats(plan_groups(requests))
-        # computed before that call (property-tested).
+        # gates and the default greedy scheduling these equal
+        # predicted_group_stats(plan_groups(requests)) computed before that
+        # call (property-tested; non-greedy policies admit in rounds, each
+        # planned separately — see plan_groups).
         self.last_batch_stats = ExecutionStats()
+
+    # Schedule flags read through the policy so there is exactly one source
+    # of truth for "how this engine schedules".
+    @property
+    def warm_start(self) -> bool:
+        return self.policy.warm_start
+
+    @property
+    def group_ordering(self) -> bool:
+        return self.policy.group_ordering
+
+    @property
+    def scheduler(self) -> RequestGroupScheduler:
+        return self.policy.scheduler
+
+    def normalized_subset(
+        self, tasks: Optional[Sequence[int]]
+    ) -> Optional[FrozenSet[int]]:
+        """A request's task subset in the scheduler's bucket-key form:
+        ``None`` for all-tasks (explicit or implicit), a frozenset else —
+        the same :func:`~repro.serving.batching.normalize_subset` the
+        scheduler buckets by, so policies score the groups that will form."""
+        return normalize_subset(tasks, self.program.graph.num_tasks)
+
+    def session(
+        self,
+        policy: Optional["SchedulingPolicy"] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ) -> "ServingSession":
+        """Open a :class:`~repro.serving.session.ServingSession` on this
+        engine (``policy`` defaults to ``self.policy.scheduling``)."""
+        from repro.serving.session import ServingSession
+
+        return ServingSession(self, policy=policy, clock=clock)
 
     # ------------------------------------------------------------- planning
     def plan_groups(
         self, requests: Sequence[MultitaskRequest]
     ) -> List[RequestGroup]:
-        """The exact group plan ``serve_batch`` will execute, in sequence.
+        """The group plan one admitted planning batch over ``requests`` runs.
 
         Deterministic, so callers can plan, predict (via
         :meth:`predicted_group_stats`), and then serve the same requests.
+        Note the plan/predict/serve equality is per *planning batch*: under
+        the default :class:`GreedyBatchPolicy` a one-shot serve admits the
+        whole request list as one batch, so ``plan_groups(requests)`` is
+        exactly what ``serve_batch(requests)`` executes — but a windowed or
+        affinity ``policy.scheduling`` admits in several policy-chosen
+        rounds, each planned separately, so predict each round's admitted
+        requests (as sessions do internally) rather than the full list.
+        With ``policy.resolve_order_per_plan`` on, each group's internal
+        task order is re-solved here (after group sequencing) and recorded
+        on ``RequestGroup.order``, so planning, prediction, and execution
+        all see the same per-plan orders.
         """
         use_order = self.group_ordering
-        return self.scheduler.plan(
+        groups = self.scheduler.plan(
             requests,
             num_tasks=self.program.graph.num_tasks,
             cost_model=self.cost_model if use_order else None,
@@ -133,6 +254,81 @@ class MultitaskEngine:
                 if use_order and self.warm_start else None
             ),
         )
+        if (
+            self.policy.resolve_order_per_plan
+            and not self.gates
+            and not (self.constraints is not None
+                     and self.constraints.conditional)
+        ):
+            # Gates are order-sensitive (a gate reads the outputs produced
+            # so far), so re-solving is only sound for ungated engines; and
+            # solve_suborder optimizes the unweighted objective (Eq. 7), so
+            # engines whose global order was solved under conditional
+            # execution probabilities (Eq. 8) keep it — a p-blind re-solve
+            # could pick a costlier order for probability-weighted
+            # workloads.
+            groups = self._resolve_plan_orders(groups)
+        return groups
+
+    def group_order(self, group: RequestGroup) -> Tuple[int, ...]:
+        """The task sequence ``group`` executes: its re-solved per-plan
+        order when one was recorded, else the global order filtered to the
+        group's subset."""
+        if group.order is not None:
+            return tuple(group.order)
+        return tuple(effective_order(self.order, group.tasks))
+
+    def _resolve_plan_orders(
+        self, groups: Sequence[RequestGroup]
+    ) -> List[RequestGroup]:
+        """Residency-aware per-plan task-order re-solving.
+
+        The global order is solved once, cold, over the full task set; a
+        group serving only a subset — warm from whatever ran before — can
+        have a strictly cheaper internal order.  Walking the planned groups
+        in execution sequence, each group's subset is re-solved
+        (:func:`repro.core.ordering.solve_suborder`) over the engine's
+        switching-cost matrix with a virtual start node whose edges are the
+        residency-conditioned entry loads (``resume_load_cost``), then the
+        simulated residency advances to what executing that order leaves
+        behind.  Outputs are order-independent (every task's output depends
+        only on its input and path), so this changes loads, never results.
+
+        Deliberately runs *after* ``order_groups``: inter-group sequencing
+        and intra-group re-solving are mutually dependent (the boundary
+        TSP needs each group's entry/exit task, the re-solve needs the
+        execution sequence to carry residency), so we fix the sequence
+        first using the filtered global orders as boundary estimates, then
+        refine each group's interior for the residency that sequence
+        actually produces.  (``order_groups`` itself honors a pre-set
+        ``RequestGroup.order`` for callers that re-sequence resolved
+        plans.)
+        """
+        depth = self.program.graph.depth
+        resident = (
+            self.executor.residency_state() if self.warm_start
+            else (None,) * depth
+        )
+        out: List[RequestGroup] = []
+        for group in groups:
+            eff = effective_order(self.order, group.tasks)
+            if len(eff) > 1:
+                start = [
+                    self.cost_model.resume_load_cost(resident, t) for t in eff
+                ]
+                solved = solve_suborder(
+                    self._cost_matrix, eff,
+                    start_costs=start, constraints=self.constraints,
+                )
+                group = dataclasses.replace(group, order=tuple(solved))
+            out.append(group)
+            if self.warm_start:
+                resident = self.cost_model.residency_after(
+                    self.group_order(group), resident
+                )
+            # Cold engines reset before every group: the virtual start sees
+            # an empty slate each time, so ``resident`` stays all-None.
+        return out
 
     def predicted_group_stats(
         self, groups: Sequence[RequestGroup]
@@ -141,34 +337,33 @@ class MultitaskEngine:
 
         Warm engines carry residency group-to-group (seeded from the
         executor's *current* residency), cold engines re-predict each group
-        from scratch; tasks outside a group's subset count as skipped.
-        Assumes every gate fires (gate outcomes are input-dependent); with
-        no gates the executor's cumulative counters match this exactly.
+        from scratch; tasks outside a group's subset count as skipped, and
+        a group's re-solved per-plan order (when present) is predicted in
+        place of the filtered global order.  Assumes every gate fires (gate
+        outcomes are input-dependent); with no gates the executor's
+        cumulative counters match this exactly.
         """
-        plan = []
-        subset_skipped = 0
+        predictor = self.cost_model.plan_predictor(
+            resume=(
+                self.executor.residency_state() if self.warm_start else None
+            ),
+            carry_residency=self.warm_start,
+        )
         for g in groups:
-            eff = effective_order(self.order, g.tasks)
-            subset_skipped += (len(self.order) - len(eff)) * g.valid
-            plan.append((eff, g.valid))
-        if self.warm_start:
-            stats = self.cost_model.predicted_group_stats(
-                plan, resume=self.executor.residency_state()
+            eff = self.group_order(g)
+            predictor.append(
+                eff, batch_size=g.valid,
+                extra_tasks_skipped=(len(self.order) - len(eff)) * g.valid,
             )
-        else:
-            stats = ExecutionStats()
-            for eff, b in plan:
-                stats = stats.merge(
-                    self.cost_model.predicted_stats(eff, batch_size=b)
-                )
-        stats.tasks_skipped += subset_skipped
-        return stats
+        return predictor.stats
 
+    # ------------------------------------------------------------ execution
     def _run_group(
-        self, group: RequestGroup
+        self, group: RequestGroup, eff: Sequence[int]
     ) -> Tuple[List[Dict[int, jax.Array]], ExecutionStats]:
         """Execute one homogeneous request group through the batched path.
 
+        ``eff`` is the group's execution order (see :meth:`group_order`).
         Gates are evaluated per request row against that row's outputs so
         far.  A task runs (batched, once) when any row's gate fires; rows
         whose gate did not fire simply drop the task's output — exact,
@@ -183,10 +378,8 @@ class MultitaskEngine:
         v = group.valid
         per_request: List[Dict[int, jax.Array]] = [dict() for _ in range(v)]
         stats = ExecutionStats()
-        for t in self.order:
-            if group.tasks is not None and t not in group.tasks:
-                stats.tasks_skipped += v
-                continue
+        stats.tasks_skipped += (len(self.order) - len(eff)) * v
+        for t in eff:
             g = self.gates.get(t)
             fire = [True] * v if g is None else [bool(g(per_request[i])) for i in range(v)]
             fired = sum(fire)
@@ -199,12 +392,88 @@ class MultitaskEngine:
                     per_request[i][t] = out[i]
         return per_request, stats
 
+    def _execute_group(self, group: RequestGroup) -> GroupExecution:
+        """Run one planned group; the session's execution primitive.
+
+        Handles the warm/cold group boundary (keep residency and drop
+        activations, or full reset), computes the group's cost prediction
+        from the executor's *actual* residency right before execution (the
+        incremental-prediction contract sessions rely on), executes, and
+        returns everything a response needs — without building responses,
+        so the session can defer future resolution behind the next group's
+        planning.
+        """
+        if self.warm_start:
+            # Warm boundary: keep residency, never the previous group's
+            # activations (they belong to different inputs).
+            self.executor.clear_activations()
+        else:
+            self.executor.reset()  # cold per group (reference semantics)
+        eff = self.group_order(group)
+        resume = self.executor.residency_state() if self.warm_start else None
+        predicted = self.cost_model.predicted_stats(
+            eff, batch_size=group.valid, resume=resume
+        )
+        warm_saved = 0.0
+        if self.warm_start:
+            cold_pred = self.cost_model.predicted_stats(
+                eff, batch_size=group.valid
+            )
+            warm_saved = (
+                cold_pred.weight_bytes_loaded - predicted.weight_bytes_loaded
+            )
+        predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
+        per_request, stats = self._run_group(group, eff)
+        return GroupExecution(
+            group=group, eff=eff, outputs=per_request, stats=stats,
+            predicted=predicted, warm_saved=warm_saved,
+        )
+
+    def _group_responses(
+        self, execution: GroupExecution
+    ) -> List[MultitaskResponse]:
+        """Responses for one executed group, in group-slot order."""
+        stats = execution.stats
+        group = execution.group
+        # Per-request share of the group's cost as executed (warm stats
+        # for a warm group) — not a cold-group estimate.
+        per_req_seconds = stats.seconds(self.hw) / max(group.valid, 1)
+        return [
+            MultitaskResponse(
+                outputs=execution.outputs[slot],
+                # Own copy per response: group-mates must not share a
+                # mutable counter object.
+                stats=dataclasses.replace(stats),
+                order=self.order,
+                predicted_seconds=per_req_seconds,
+                group_size=group.valid,
+                warm_weight_bytes_saved=execution.warm_saved,
+                effective_order=execution.eff,
+            )
+            for slot in range(group.valid)
+        ]
+
+    # ---------------------------------------------------- one-shot wrappers
+    def _serve_via_session(
+        self, requests: Sequence[MultitaskRequest]
+    ) -> List[MultitaskResponse]:
+        """One-shot session: submit everything, drain, collect in order."""
+        session = self.session()
+        futures = [session.submit(r) for r in requests]
+        session.drain()
+        self.last_batch_stats = session.stats
+        return [f.result() for f in futures]
+
     def serve_batch(
         self, requests: Sequence[MultitaskRequest]
     ) -> List[MultitaskResponse]:
         """Serve many requests via grouped batched execution.
 
-        The scheduler buckets requests into homogeneous padded groups (and,
+        A thin wrapper over a one-shot :meth:`session`: every request is
+        submitted, then the session drains under the engine's scheduling
+        policy (the default :class:`GreedyBatchPolicy` admits the whole
+        list as one planning batch — the exact pre-session semantics).  The
+        scheduler buckets requests into homogeneous padded groups (and,
         with group ordering on, sequences them by warm boundary cost); each
         group runs the block-cached executor once with every block vmapped
         over the group, so weight loads amortise across the group's
@@ -213,53 +482,25 @@ class MultitaskEngine:
         consecutive groups sharing a prefix skip those weight loads too.
         Responses come back in submission order.
         """
-        groups = self.plan_groups(requests)
-        responses: List[Optional[MultitaskResponse]] = [None] * len(requests)
-        self.last_batch_stats = ExecutionStats()
-        for group in groups:
-            if self.warm_start:
-                # Warm boundary: keep residency, never the previous group's
-                # activations (they belong to different inputs).
-                self.executor.clear_activations()
-            else:
-                self.executor.reset()  # cold per group (reference semantics)
-            eff = effective_order(self.order, group.tasks)
-            warm_saved = 0.0
-            if self.warm_start:
-                warm_pred = self.cost_model.predicted_stats(
-                    eff, batch_size=group.valid,
-                    resume=self.executor.residency_state(),
-                )
-                cold_pred = self.cost_model.predicted_stats(
-                    eff, batch_size=group.valid
-                )
-                warm_saved = (
-                    cold_pred.weight_bytes_loaded - warm_pred.weight_bytes_loaded
-                )
-            per_request, stats = self._run_group(group)
-            self.last_batch_stats = self.last_batch_stats.merge(stats)
-            # Per-request share of the group's cost as executed (warm stats
-            # for a warm group) — not a cold-group estimate.
-            per_req_seconds = stats.seconds(self.hw) / max(group.valid, 1)
-            for slot, idx in enumerate(group.indices):
-                responses[idx] = MultitaskResponse(
-                    outputs=per_request[slot],
-                    # Own copy per response: group-mates must not share a
-                    # mutable counter object.
-                    stats=dataclasses.replace(stats),
-                    order=self.order,
-                    predicted_seconds=per_req_seconds,
-                    group_size=group.valid,
-                    warm_weight_bytes_saved=warm_saved,
-                )
-        assert all(r is not None for r in responses)
-        return responses  # type: ignore[return-value]
+        return self._serve_via_session(requests)
 
     def serve(self, request: MultitaskRequest) -> MultitaskResponse:
         return self.serve_batch([request])[0]
 
     def serve_many(self, requests: Sequence[MultitaskRequest]) -> List[MultitaskResponse]:
-        return self.serve_batch(list(requests))
+        """Deprecated alias of :meth:`serve_batch` (kept for one release).
+
+        Historically this simply aliased ``serve_batch``; it now routes
+        through the same one-shot session and warns so callers migrate to
+        ``serve_batch`` or an explicit :meth:`session`.
+        """
+        warnings.warn(
+            "MultitaskEngine.serve_many is deprecated; use serve_batch() or "
+            "a ServingSession (engine.session()) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._serve_via_session(list(requests))
 
 
 # --------------------------------------------------------------------------

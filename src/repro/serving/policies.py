@@ -1,0 +1,220 @@
+"""Pluggable scheduling policies and the engine-level policy config.
+
+Batching-aware multitask serving treats *which requests run together, and
+when* as a first-class, swappable decision rather than a hard-coded engine
+flag.  A :class:`SchedulingPolicy` owns exactly that decision for a
+:class:`~repro.serving.session.ServingSession`: each pump of the session it
+inspects the admission queue (and, through the engine, the cost model and
+the executor's current weight residency) and returns the pending requests to
+admit as the next planning batch — or nothing, to keep accumulating.
+
+Three policies ship:
+
+* :class:`GreedyBatchPolicy` — admit everything pending at once.  This is
+  the pre-session ``serve_batch`` semantics: one plan over the whole
+  request list, and the policy one-shot wrappers use so existing entry
+  points reproduce their old outputs exactly.
+* :class:`WindowPolicy` — admit by max-wait / max-group-size, in arrival
+  order.  The classic batching window: requests accumulate until the window
+  fills or the oldest request has waited long enough.
+* :class:`AffinityPolicy` — residency-aware admission: among the pending
+  task-subset buckets, admit the one whose cheapest entry task costs the
+  least to resume from the executor's *current* residency (deepest shared
+  prefix with whatever just ran).  The paper's switching-cost idea applied
+  at admission time, before grouping or ordering ever see the requests.
+
+:class:`EnginePolicy` folds everything schedule-shaped about the engine —
+the old ``warm_start`` / ``group_ordering`` constructor flags, the request
+grouping scheduler, per-plan order re-solving, and the session scheduling
+policy — into one config object, so "how this engine schedules" is a single
+value that can be swapped, logged, or swept.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Optional, Protocol, Tuple
+
+from repro.serving.batching import RequestGroupScheduler, effective_order
+
+if TYPE_CHECKING:  # session/engine import this module; keep runtime acyclic
+    from repro.serving.engine import MultitaskEngine
+    from repro.serving.session import AdmissionQueue, PendingRequest
+
+
+class SchedulingPolicy(Protocol):
+    """Admission control for a :class:`~repro.serving.session.ServingSession`.
+
+    ``admit`` is called repeatedly during each session pump until it returns
+    an empty list: inspect ``queue`` (arrival times, task subsets) and
+    ``engine`` (cost model, current residency), pop the entries to admit as
+    one planning batch via the queue's ``pop_*`` methods, and return them.
+    ``now`` is the session clock reading for this pump.  ``flush=True``
+    means the caller intends to empty the queue (``drain()`` or a one-shot
+    serve): size/wait thresholds must be ignored, but *selection order*
+    is still the policy's to choose — an affinity policy still empties the
+    queue residency-nearest-first.
+    """
+
+    def admit(
+        self,
+        queue: "AdmissionQueue",
+        engine: "MultitaskEngine",
+        now: float,
+        flush: bool,
+    ) -> List["PendingRequest"]:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyBatchPolicy:
+    """Admit everything pending immediately (classic ``serve_batch``).
+
+    One admission round covers the whole queue, so the downstream planner
+    sees the full request list at once — exactly what the one-shot entry
+    points did before sessions existed, which is why the ``serve`` /
+    ``serve_batch`` wrappers run under this policy by default.
+    """
+
+    def admit(self, queue, engine, now, flush):
+        return queue.pop_all()
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPolicy:
+    """Admit by max-wait / max-group-size, in arrival order.
+
+    Requests accumulate until either ``max_group_size`` are pending (admit
+    the first ``max_group_size``) or the oldest pending request has waited
+    ``max_wait`` seconds (admit what's there, bounded by the same size cap
+    so a long-idle queue still produces bounded groups).  This is the
+    arrival-order baseline the residency-aware policies are measured
+    against.
+    """
+
+    max_wait: float = 0.05
+    max_group_size: int = 16
+
+    def __post_init__(self):
+        if self.max_group_size < 1:
+            raise ValueError(f"max_group_size must be >= 1, got {self.max_group_size}")
+        if self.max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {self.max_wait}")
+
+    def admit(self, queue, engine, now, flush):
+        if not queue:
+            return []
+        full = len(queue) >= self.max_group_size
+        aged = now - queue.oldest_arrival() >= self.max_wait
+        if flush or full or aged:
+            return queue.pop_first(self.max_group_size)
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class AffinityPolicy:
+    """Residency-aware admission: group requests whose task subsets share
+    deep prefixes with what is already resident.
+
+    Pending requests are bucketed by (normalised) requested task subset.
+    When an admission fires, the policy scores every bucket by the cheapest
+    ``resume_load_cost`` from the executor's *current* residency to any task
+    in the bucket's subset — i.e. how little it would cost to start serving
+    that bucket right now, given the blocks the previous group left in
+    memory — and admits up to ``max_group_size`` requests (FIFO within the
+    bucket) from the best one.  Repeated admission rounds therefore empty
+    the queue in a residency-chained sequence, the admission-time analogue
+    of ``order_groups``'s boundary-cost TSP, without ever waiting for the
+    full request list.
+
+    Thresholds mirror :class:`WindowPolicy`: admissions fire when
+    ``min_pending`` (default ``max_group_size``) requests are queued, when
+    the oldest has waited ``max_wait`` (``None`` = no ageing trigger), or on
+    flush.
+    """
+
+    max_group_size: int = 16
+    min_pending: Optional[int] = None
+    max_wait: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_group_size < 1:
+            raise ValueError(f"max_group_size must be >= 1, got {self.max_group_size}")
+
+    def admit(self, queue, engine, now, flush):
+        if not queue:
+            return []
+        aged = (
+            self.max_wait is not None
+            and now - queue.oldest_arrival() >= self.max_wait
+        )
+        threshold = (
+            self.min_pending if self.min_pending is not None
+            else self.max_group_size
+        )
+        if not (flush or aged or len(queue) >= threshold):
+            return []
+        buckets: Dict[object, List["PendingRequest"]] = {}
+        for p in queue.pending:
+            # Normalized once at submit time; pumping stays O(pending).
+            buckets.setdefault(p.subset, []).append(p)
+        resident = engine.executor.residency_state()
+
+        def resume_cost(subset) -> float:
+            tasks = effective_order(engine.order, subset)
+            if not tasks:  # empty subset executes nothing: free
+                return 0.0
+            return min(
+                engine.cost_model.resume_load_cost(resident, t) for t in tasks
+            )
+
+        _key, best = min(
+            buckets.items(),
+            key=lambda kv: (
+                resume_cost(kv[0]),
+                kv[1][0].seq,  # deterministic tie-break: oldest bucket
+            ),
+        )
+        return queue.pop_seqs(p.seq for p in best[: self.max_group_size])
+
+
+def _default_scheduling() -> SchedulingPolicy:
+    return GreedyBatchPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePolicy:
+    """Everything schedule-shaped about a :class:`MultitaskEngine`.
+
+    Attributes:
+      warm_start: keep executor weight residency across request groups
+        (activations are always dropped at group boundaries); ``False``
+        resets the executor cold before every group.
+      group_ordering: sequence planned groups by the cost model's warm
+        boundary costs (``order_groups``) instead of bucket order.
+      resolve_order_per_plan: re-solve each planned group's internal task
+        order (``ordering.solve_suborder``) seeded with the residency the
+        engine will actually have when the group runs, instead of using the
+        cold global order filtered to the group's subset.  Ignored when the
+        engine has runtime gates (gate semantics are order-sensitive) or
+        conditional-probability constraints (the re-solve optimizes the
+        unweighted objective and could undo the probability-weighted
+        global solve).
+      scheduling: the session admission policy; the one-shot entry points
+        (``serve`` / ``serve_batch``) run their internal session under it.
+      scheduler: the request-group scheduler (bucketing / padding shapes);
+        ``None`` means a default :class:`RequestGroupScheduler`, which the
+        engine folds back into its ``policy`` at construction so
+        ``engine.policy`` alone describes the engine's full scheduling
+        behavior.
+
+    The defaults reproduce the pre-session engine exactly: greedy one-shot
+    admission, warm starts, cost-aware group ordering, global task order.
+    """
+
+    warm_start: bool = True
+    group_ordering: bool = True
+    resolve_order_per_plan: bool = False
+    scheduling: SchedulingPolicy = dataclasses.field(
+        default_factory=_default_scheduling
+    )
+    scheduler: Optional[RequestGroupScheduler] = None

@@ -1,0 +1,334 @@
+"""Session-based serving: async admission over the multitask engine.
+
+The one-shot entry points (``serve`` / ``serve_batch``) plan a fixed request
+list all at once.  A :class:`ServingSession` decouples the three phases so
+they can overlap and be controlled independently:
+
+* **admission** — :meth:`ServingSession.submit` enqueues a request at any
+  time and returns a lightweight :class:`MultitaskFuture` immediately; an
+  :class:`AdmissionQueue` accumulates pending requests under a pluggable
+  :class:`~repro.serving.policies.SchedulingPolicy` that decides *when* a
+  batch fires and *which* requests ride in it (greedy, windowed, or
+  residency-affine);
+* **planning** — each admitted batch goes through the engine's full
+  planning stack (subset bucketing, padding, cost-aware group ordering,
+  optional per-plan order re-solving).  Planning is pure host work: because
+  JAX dispatch is asynchronous, the session plans admission batch *k+1*
+  while batch *k*'s dispatched programs are still executing on the device
+  — the planning-overlaps-execution pipeline the roadmap names;
+* **execution** — groups run through the engine's batched executor exactly
+  as ``serve_batch`` runs them; responses land in their futures as soon as
+  their group has been dispatched (resolution is non-blocking: outputs are
+  unsynced JAX arrays, reading them blocks as usual).
+
+``session.stats`` accumulates the executed counters and
+``session.predicted`` the cost model's incremental prediction (each group
+predicted from the executor's actual residency right before it runs — the
+incremental form of ``predicted_group_stats``).  With no gates the two are
+equal, field for field, which the property tests assert.
+
+Driving the loop: callers either poll :meth:`step` on their own cadence
+(arrival-driven serving — the admission benchmark does this on a simulated
+Poisson trace), call :meth:`flush` to force one admit-everything pass, or
+call :meth:`drain` to serve until the queue is empty.  ``Future.result()``
+drains the session if its response is not ready, so ``submit`` + ``result``
+alone is a complete (if fully synchronous) usage.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (
+    TYPE_CHECKING, Callable, Deque, Iterable, List, Optional, Tuple,
+)
+
+from repro.core.types import ExecutionStats
+
+if TYPE_CHECKING:
+    from repro.serving.engine import (
+        GroupExecution, MultitaskEngine, MultitaskRequest, MultitaskResponse,
+    )
+    from repro.serving.policies import SchedulingPolicy
+
+
+class MultitaskFuture:
+    """Handle for one submitted request's eventual response.
+
+    ``done()`` is non-blocking; ``result()`` drives the owning session's
+    :meth:`~ServingSession.drain` when the response is not yet available, so
+    a future can always be resolved synchronously.  (Outputs inside the
+    response are JAX arrays and may still be materialising on-device;
+    reading them blocks as usual.)
+
+    A future whose admitted batch failed mid-pump (planning or execution
+    raised after its request left the queue) is *failed*, not stranded:
+    ``done()`` reports True and ``result()`` re-raises the original error.
+    """
+
+    __slots__ = ("_session", "seq", "_response", "_error")
+
+    def __init__(self, session: "ServingSession", seq: int):
+        self._session = session
+        self.seq = seq
+        self._response: Optional["MultitaskResponse"] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._response is not None or self._error is not None
+
+    def result(self) -> "MultitaskResponse":
+        if not self.done():
+            self._session.drain()
+        if self._error is not None:
+            raise self._error
+        if self._response is None:  # pragma: no cover - drain() guarantees
+            raise RuntimeError(f"request {self.seq} unresolved after drain")
+        return self._response
+
+    def _set(self, response: "MultitaskResponse") -> None:
+        self._response = response
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = (
+            "failed" if self._error is not None
+            else "done" if self._response is not None else "pending"
+        )
+        return f"MultitaskFuture(seq={self.seq}, {state})"
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """One queued request awaiting admission.
+
+    ``subset`` is the request's normalized task subset (the scheduler's
+    bucket key), computed once at submit time so admission policies can
+    bucket/score pending requests without re-normalizing the queue on
+    every pump.
+    """
+
+    seq: int
+    request: "MultitaskRequest"
+    arrival: float
+    future: MultitaskFuture
+    subset: object = None
+
+
+class AdmissionQueue:
+    """FIFO of pending requests with policy-directed selective removal.
+
+    Policies read :attr:`pending` (an arrival-ordered snapshot) to score
+    candidates, then remove what they admit with :meth:`pop_all`,
+    :meth:`pop_first`, or :meth:`pop_seqs` — removal is explicit so a
+    request can never be admitted twice or dropped silently.
+    """
+
+    def __init__(self) -> None:
+        self._entries: List[PendingRequest] = []
+
+    def push(self, entry: PendingRequest) -> None:
+        self._entries.append(entry)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+    @property
+    def pending(self) -> Tuple[PendingRequest, ...]:
+        """Arrival-ordered snapshot of everything awaiting admission."""
+        return tuple(self._entries)
+
+    def oldest_arrival(self) -> float:
+        if not self._entries:
+            raise ValueError("queue is empty")
+        return self._entries[0].arrival
+
+    def pop_all(self) -> List[PendingRequest]:
+        out, self._entries = self._entries, []
+        return out
+
+    def pop_first(self, n: int) -> List[PendingRequest]:
+        out, self._entries = self._entries[:n], self._entries[n:]
+        return out
+
+    def pop_seqs(self, seqs: Iterable[int]) -> List[PendingRequest]:
+        """Remove and return the entries with these seqs, arrival-ordered."""
+        want = set(seqs)
+        out = [e for e in self._entries if e.seq in want]
+        missing = want - {e.seq for e in out}
+        if missing:
+            raise KeyError(f"seqs not pending: {sorted(missing)}")
+        self._entries = [e for e in self._entries if e.seq not in want]
+        return out
+
+
+class ServingSession:
+    """Async admission + pipelined planning/execution over one engine.
+
+    Args:
+      engine: the :class:`MultitaskEngine` to serve through.  A session
+        assumes exclusive use of the engine's executor while it has work in
+        flight (interleaving one-shot ``serve`` calls shifts residency and
+        breaks the incremental prediction's exactness, though never
+        correctness).
+      policy: the admission :class:`SchedulingPolicy`; defaults to the
+        engine's configured ``EnginePolicy.scheduling``.
+      clock: time source for arrival stamps and wait/window decisions
+        (``time.monotonic`` by default; benchmarks inject simulated clocks,
+        and every public method also accepts an explicit ``now``).
+    """
+
+    def __init__(
+        self,
+        engine: "MultitaskEngine",
+        policy: Optional["SchedulingPolicy"] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        self.engine = engine
+        self.policy = policy if policy is not None else engine.policy.scheduling
+        self._clock = clock if clock is not None else time.monotonic
+        self.queue = AdmissionQueue()
+        self._seq = 0
+        # ------------------------------------------------- running counters
+        self.stats = ExecutionStats()       # executed, cumulative
+        self.predicted = ExecutionStats()   # all-gates-fire prediction
+        self.requests_submitted = 0
+        self.requests_admitted = 0
+        self.admission_rounds = 0
+        self.groups_executed = 0
+        self.plan_seconds = 0.0
+        # Admission-latency tracking: running aggregates over every admitted
+        # request (exact for the session's whole lifetime) plus a bounded
+        # window of recent samples — a long-lived session must not grow a
+        # per-request list forever.
+        self.waits: Deque[float] = collections.deque(maxlen=self.WAITS_WINDOW)
+        self.wait_sum = 0.0
+        self.wait_max = 0.0
+
+    #: recent admission-latency samples kept in ``waits`` (aggregates in
+    #: ``wait_sum`` / ``wait_max`` / ``mean_admission_wait`` cover all).
+    WAITS_WINDOW = 4096
+
+    @property
+    def mean_admission_wait(self) -> float:
+        """Mean admission latency over every request ever admitted."""
+        if not self.requests_admitted:
+            return 0.0
+        return self.wait_sum / self.requests_admitted
+
+    @property
+    def max_admission_wait(self) -> float:
+        """Max admission latency over every request ever admitted."""
+        return self.wait_max
+
+    # ------------------------------------------------------------ admission
+    def _now(self, now: Optional[float]) -> float:
+        return self._clock() if now is None else float(now)
+
+    def submit(
+        self, request: "MultitaskRequest", now: Optional[float] = None
+    ) -> MultitaskFuture:
+        """Enqueue one request; returns its future immediately.
+
+        Nothing executes until a pump (:meth:`step` / :meth:`flush` /
+        :meth:`drain`) lets the scheduling policy admit it — that is what
+        makes one-shot ``serve_batch`` (submit all, then drain) plan the
+        whole list as a single batch.
+        """
+        fut = MultitaskFuture(self, self._seq)
+        self.queue.push(PendingRequest(
+            seq=self._seq, request=request, arrival=self._now(now), future=fut,
+            subset=self.engine.normalized_subset(request.tasks),
+        ))
+        self._seq += 1
+        self.requests_submitted += 1
+        return fut
+
+    # ------------------------------------------------------------- pumping
+    def step(self, now: Optional[float] = None) -> List["MultitaskResponse"]:
+        """One scheduling pump: admit/plan/execute whatever the policy says
+        is ready at ``now``.  Returns the responses resolved by this pump
+        (execution order, possibly including groups dispatched earlier)."""
+        return self._pump(self._now(now), flush=False)
+
+    def flush(self, now: Optional[float] = None) -> List["MultitaskResponse"]:
+        """Pump with flush semantics: thresholds off, queue emptied, and the
+        last in-flight group resolved."""
+        return self._pump(self._now(now), flush=True)
+
+    def drain(self) -> List["MultitaskResponse"]:
+        """Serve until nothing is pending."""
+        out = self.flush()
+        if self.queue:
+            raise RuntimeError(
+                f"drain incomplete: scheduling policy {self.policy!r} "
+                f"returned no admissions on flush with "
+                f"{len(self.queue)} request(s) still pending — flush=True "
+                f"must empty the queue (see SchedulingPolicy.admit)"
+            )
+        return out
+
+    def pending_count(self) -> int:
+        return len(self.queue)
+
+    def _pump(self, now: float, flush: bool) -> List["MultitaskResponse"]:
+        completed: List["MultitaskResponse"] = []
+        while True:
+            admitted = self.policy.admit(self.queue, self.engine, now, flush)
+            if not admitted:
+                break
+            self.admission_rounds += 1
+            self.requests_admitted += len(admitted)
+            for p in admitted:
+                wait = now - p.arrival
+                self.waits.append(wait)
+                self.wait_sum += wait
+                self.wait_max = max(self.wait_max, wait)
+            try:
+                # Planning (bucketing, group-ordering TSP, per-plan
+                # re-solve) is host-only work; any previously dispatched
+                # group is still executing asynchronously on the device
+                # underneath it.
+                t0 = time.perf_counter()
+                groups = self.engine.plan_groups(
+                    [p.request for p in admitted])
+                self.plan_seconds += time.perf_counter() - t0
+                for group in groups:
+                    members = tuple(admitted[slot] for slot in group.indices)
+                    execution = self.engine._execute_group(group)
+                    self.groups_executed += 1
+                    self.stats = self.stats.merge(execution.stats)
+                    self.predicted = self.predicted.merge(execution.predicted)
+                    # Resolve immediately: building responses is
+                    # non-blocking host work (outputs are unsynced JAX
+                    # arrays, the modelled seconds come from counters), so
+                    # deferring resolution would buy no extra overlap —
+                    # and an exception in a later group must not strand
+                    # futures whose group already ran.
+                    completed.extend(self._resolve(execution, members))
+            except BaseException as err:
+                # The admitted entries already left the queue; anything not
+                # yet resolved would otherwise be stranded forever.  Fail
+                # those futures so result() re-raises the cause instead of
+                # reporting an inexplicable unresolved request.
+                for p in admitted:
+                    if not p.future.done():
+                        p.future._fail(err)
+                raise
+        return completed
+
+    def _resolve(
+        self,
+        execution: "GroupExecution",
+        members: Tuple[PendingRequest, ...],
+    ) -> List["MultitaskResponse"]:
+        """Build responses for one executed group and fill its futures."""
+        responses = self.engine._group_responses(execution)
+        for entry, response in zip(members, responses):
+            entry.future._set(response)
+        return responses
