@@ -15,3 +15,7 @@ python benchmarks/serving_groups.py --dry-run
 # Admission-policy sweep: sessioned-vs-sequential equivalence, exact
 # incremental counters, and the >= 1.2x affinity-vs-window load gate.
 python benchmarks/serving_admission.py --dry-run
+# Mesh-sharded serving sweep: sharded-vs-single-device equivalence, exact
+# collective-inclusive counters vs HLO measurement, and the >= 1.2x
+# modelled sharded-speedup gate on a forced 8-device CPU mesh.
+python benchmarks/serving_mesh.py --dry-run

@@ -16,7 +16,7 @@ reproduces the paper's Figure-4 example where every block costs 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -38,12 +38,18 @@ class GraphCostModel:
       hw: platform; ``None`` means abstract unit costs (1 load + 1 exec per
         block, as in the paper's Figure 4 walkthrough).
       metric: ``"time"`` or ``"energy"`` (paper evaluates both).
+      weight_shards: how many ways block weights are sharded over a device
+        mesh (``ShardingPolicy.weight_shards``): every load term divides by
+        it — each chip streams only its slice — so the ordering solvers
+        minimize the *sharded* schedule cost rather than the single-device
+        proxy.  ``1`` (single device) reproduces the original model exactly.
     """
 
     graph: TaskGraph
     block_costs: Sequence[BlockCost]
     hw: Optional[HardwareModel] = None
     metric: str = "time"
+    weight_shards: int = 1
 
     def block_cost(self, depth: int) -> float:
         """Load + execute cost of the depth-``depth`` block."""
@@ -51,8 +57,11 @@ class GraphCostModel:
             return 2.0  # 1 unit load + 1 unit exec, Figure-4 convention
         bc = self.block_costs[depth]
         if self.metric == "energy":
-            return bc.energy_joules(self.hw)
-        return bc.total_seconds(self.hw)
+            return (
+                self.hw.energy_joules(bc.flops, bc.act_bytes)
+                + self.load_cost(depth)
+            )
+        return bc.exec_seconds(self.hw) + self.load_cost(depth)
 
     def task_cost(self, task: int) -> float:
         """Cold cost of running ``task`` with nothing cached."""
@@ -64,13 +73,18 @@ class GraphCostModel:
         This is the part of a block's cost that warm starts can save: the
         execute part is always paid for a fresh input, but the load is
         skipped whenever the block is still resident from an earlier group.
+        Sharded weights (``weight_shards > 1``) stream in parallel, one
+        slice per chip, so the term divides accordingly.
         """
         if self.hw is None:
             return 1.0  # the Figure-4 unit-load convention
         bc = self.block_costs[depth]
         if self.metric == "energy":
-            return self.hw.energy_joules(0.0, 2.0 * bc.weight_bytes)
-        return bc.load_seconds(self.hw)
+            return (
+                self.hw.energy_joules(0.0, 2.0 * bc.weight_bytes)
+                / max(self.weight_shards, 1)
+            )
+        return bc.load_seconds(self.hw) / max(self.weight_shards, 1)
 
     def switching_cost(self, prev: int, nxt: int) -> float:
         """``c[prev, nxt]``: cost of the non-shared suffix of ``nxt``."""
@@ -151,6 +165,7 @@ class GraphCostModel:
         batch_size: int,
         resident: List[Optional[NodeId]],
         stats: ExecutionStats,
+        collectives: Optional["CollectiveCosts"] = None,
     ) -> None:
         """One group's counter prediction, mutating ``resident``/``stats``.
 
@@ -158,6 +173,13 @@ class GraphCostModel:
         of a group never resumes from activations (the executor clears them
         at every input/group boundary), but any block still resident in
         ``resident`` skips its load while still executing.
+
+        ``collectives`` (``TaskGraphExecutor.collective_view``) adds the
+        mesh-sharded collective bytes of each task's fused-suffix dispatch:
+        for an ungated engine the executor resumes task ``t`` exactly at the
+        shared-prefix depth with its predecessor, so the per-``(task,
+        resume)`` calibrated breakdown lands on the same counters the
+        executor will report — exact by construction.
         """
         prev: Optional[int] = None
         for t in order:
@@ -180,6 +202,8 @@ class GraphCostModel:
                     stats.flops_executed += batch_size * bc.flops
                 resident[d] = path[d]
             stats.tasks_run += batch_size
+            if collectives is not None:
+                stats.add_collectives(collectives.breakdown(t, shared))
             prev = t
 
     def predicted_stats(
@@ -187,6 +211,7 @@ class GraphCostModel:
         order: Sequence[int],
         batch_size: int = 1,
         resume: Optional[Residency] = None,
+        collectives: Optional["CollectiveCosts"] = None,
     ) -> ExecutionStats:
         """Counter-level prediction the executor must match exactly.
 
@@ -202,6 +227,9 @@ class GraphCostModel:
         already resident skip their loads but still execute (activations
         never cross a group boundary).  ``resume=None`` is the cold
         prediction.
+
+        ``collectives`` is the executor's per-dispatch collective-byte view
+        for the group's (padded) batch shape; see :meth:`_predict_into`.
         """
         resident: List[Optional[NodeId]] = (
             list(resume) if resume is not None else [None] * self.graph.depth
@@ -211,7 +239,7 @@ class GraphCostModel:
                 f"resume has {len(resident)} slots, expected {self.graph.depth}"
             )
         stats = ExecutionStats()
-        self._predict_into(order, batch_size, resident, stats)
+        self._predict_into(order, batch_size, resident, stats, collectives)
         return stats
 
     def predicted_group_stats(
@@ -311,21 +339,39 @@ class PlanPredictor:
         order: Sequence[int],
         batch_size: int = 1,
         extra_tasks_skipped: int = 0,
+        collectives: Optional["CollectiveCosts"] = None,
     ) -> ExecutionStats:
         """Account one more admitted group; returns that group's delta.
 
         ``extra_tasks_skipped`` lets callers fold in schedule-level skips
         (engine tasks outside the group's requested subset) so the
         cumulative prediction matches the engine's counters field-for-field.
+        ``collectives`` adds the mesh-sharded collective bytes of this
+        group's dispatches (see ``GraphCostModel.predicted_stats``).
         """
         if not self.carry_residency:
             self._resident = [None] * self.model.graph.depth
         delta = ExecutionStats()
-        self.model._predict_into(order, int(batch_size), self._resident, delta)
+        self.model._predict_into(
+            order, int(batch_size), self._resident, delta, collectives
+        )
         delta.tasks_skipped += int(extra_tasks_skipped)
         self.stats = self.stats.merge(delta)
         self.groups += 1
         return delta
+
+
+class CollectiveCosts(Protocol):
+    """Per-dispatch collective-byte source for counter predictions.
+
+    ``breakdown(task, resume)`` returns the per-kind collective bytes (HLO
+    kind name -> bytes) of the fused-suffix program that runs ``task``
+    resuming at depth ``resume`` — ``TaskGraphExecutor.collective_view``
+    is the calibrated implementation.
+    """
+
+    def breakdown(self, task: int, resume: int) -> Dict[str, float]:
+        ...
 
 
 def uniform_block_costs(

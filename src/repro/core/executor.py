@@ -56,10 +56,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.constraints import Constraints
 from repro.core.task_graph import TaskGraph
 from repro.core.types import BlockCost, ExecutionStats, NodeId
+from repro.sharding.policy import ShardingPolicy, TP_POLICY
+from repro.sharding.utils import fit_spec
 
 # What residency_state returns and what GraphCostModel.predicted_stats
 # accepts as ``resume`` (the concrete tuple form of types.Residency).
@@ -112,6 +115,14 @@ class TaskGraphExecutor:
         per-block reference path).
       fused: execute each non-shared suffix as one fused program (default);
         ``False`` selects the per-block reference dispatch path.
+      mesh: optional ``jax.sharding.Mesh`` for sharded execution: the batch
+        dimension shards over the policy's batch axes, parameters over the
+        policy's ``model``/``fsdp`` axes (``ShardingPolicy.param_spec``),
+        and activations are constrained to the batch layout inside every
+        fused program — so the compiled suffix is identical to what the
+        collective calibration lowers.  Requires the fused jitted path.
+      sharding: logical->physical axis policy; defaults to ``TP_POLICY``
+        when a mesh is given.
     """
 
     def __init__(
@@ -119,10 +130,22 @@ class TaskGraphExecutor:
         program: MultitaskProgram,
         jit_blocks: bool = True,
         fused: bool = True,
+        mesh: Optional[Any] = None,
+        sharding: Optional[ShardingPolicy] = None,
     ):
         self.program = program
         self._jit = jit_blocks
         self._fused = fused
+        if mesh is not None and not (jit_blocks and fused):
+            raise ValueError(
+                "mesh-sharded execution requires the fused jitted dispatch "
+                "path (jit_blocks=True, fused=True)"
+            )
+        self.mesh = mesh
+        self.sharding: Optional[ShardingPolicy] = (
+            sharding if sharding is not None
+            else (TP_POLICY if mesh is not None else None)
+        )
         self._compiled: Dict[int, Callable] = {}
         self._compiled_heads: Dict[int, Callable] = {}
         self._compiled_batch: Dict[int, Callable] = {}
@@ -132,6 +155,14 @@ class TaskGraphExecutor:
         self._compiled_fused: Dict[Tuple, Tuple[Callable, str]] = {}
         # (task, resume) -> stacked suffix params for the scan mode.
         self._stacked_params: Dict[Tuple[int, int], Any] = {}
+        # Mesh-placed parameter copies (input-independent; survive reset).
+        self._placed_node: Dict[NodeId, Any] = {}
+        self._placed_head: Dict[int, Any] = {}
+        # Calibration caches: suffix-input avals, lowered HLO text, and the
+        # per-kind collective bytes the cost model adds per dispatch.
+        self._suffix_sds: Dict[Tuple, jax.ShapeDtypeStruct] = {}
+        self._suffix_hlo: Dict[Tuple, str] = {}
+        self._coll_bytes: Dict[Tuple, Dict[str, float]] = {}
         # Physical program dispatches (jitted-call invocations).  Cumulative;
         # not part of ExecutionStats (those are cost-model-predictable logical
         # counters — dispatches depend on the fused/per-block mode).
@@ -220,25 +251,87 @@ class TaskGraphExecutor:
             self._compiled_heads_batch[task] = jax.jit(fn) if self._jit else fn
         return self._compiled_heads_batch[task]
 
+    # ------------------------------------------------------ mesh placement
+    def _place_param_leaf(self, leaf: Any, stacked: bool = False) -> Any:
+        """``device_put`` one parameter leaf to its policy layout."""
+        shape = tuple(jnp.shape(leaf))
+        spec = self.sharding.param_spec(shape[1:] if stacked else shape)
+        if stacked:
+            spec = P(None, *spec)  # the scan's layer axis never shards
+        spec = fit_spec(shape, spec, self.mesh)
+        return jax.device_put(leaf, NamedSharding(self.mesh, spec))
+
+    def _node_param(self, node: NodeId) -> Any:
+        if self.mesh is None:
+            return self.program.node_params[node]
+        if node not in self._placed_node:
+            self._placed_node[node] = jax.tree_util.tree_map(
+                self._place_param_leaf, self.program.node_params[node]
+            )
+        return self._placed_node[node]
+
+    def _head_param(self, task: int) -> Any:
+        if self.mesh is None:
+            return self.program.head_params[task]
+        if task not in self._placed_head:
+            self._placed_head[task] = jax.tree_util.tree_map(
+                self._place_param_leaf, self.program.head_params[task]
+            )
+        return self._placed_head[task]
+
+    def _batch_sharding(self, shape: Tuple[int, ...], batched: bool):
+        """The NamedSharding of a batch-leading tensor (replicated when the
+        tensor carries no batch axis, i.e. the single-request path)."""
+        spec = P(self.sharding.physical("batch")) if batched else P()
+        return NamedSharding(self.mesh, fit_spec(shape, spec, self.mesh))
+
+    def _act_constrainer(self, batched: bool) -> Optional[Callable]:
+        """Constraint pinning activations to the batch layout inside fused
+        programs, so the executed program equals the calibrated one and
+        cached activations never reshard on re-entry."""
+        if self.mesh is None or not batched:
+            return None
+
+        def constrain(y: jnp.ndarray) -> jnp.ndarray:
+            return jax.lax.with_sharding_constraint(
+                y, self._batch_sharding(tuple(y.shape), batched=True)
+            )
+
+        return constrain
+
     # -------------------------------------------------------- fused suffix
     def _suffix_params(self, task: int, resume: int) -> Tuple[Any, ...]:
         path = self.program.graph.path(task)
         return tuple(
-            self.program.node_params[path[d]]
+            self._node_param(path[d])
             for d in range(resume, self.program.graph.depth)
         )
 
     def _stacked_suffix_params(self, task: int, resume: int) -> Any:
         key = (task, resume)
         if key not in self._stacked_params:
-            params = self._suffix_params(task, resume)
-            self._stacked_params[key] = jax.tree_util.tree_map(
+            path = self.program.graph.path(task)
+            params = tuple(
+                self.program.node_params[path[d]]
+                for d in range(resume, self.program.graph.depth)
+            )
+            stacked = jax.tree_util.tree_map(
                 lambda *ls: jnp.stack(ls), *params
             )
+            if self.mesh is not None:
+                stacked = jax.tree_util.tree_map(
+                    lambda l: self._place_param_leaf(l, stacked=True), stacked
+                )
+            self._stacked_params[key] = stacked
         return self._stacked_params[key]
 
     def _fused_fn(
-        self, task: int, resume: int, batched: bool, x: jnp.ndarray
+        self,
+        task: int,
+        resume: int,
+        batched: bool,
+        shape: Tuple[int, ...],
+        dtype: Any,
     ) -> Tuple[Callable, str]:
         """Build (or fetch) the fused suffix program for one resume point.
 
@@ -248,9 +341,13 @@ class TaskGraphExecutor:
         tasks can still resume mid-path.  Mode "scan" stacks the suffix's
         (homogeneous, shape-preserving) params and iterates with
         ``lax.scan``; mode "unrolled" traces the heterogeneous suffix block
-        by block inside one program.
+        by block inside one program.  ``shape``/``dtype`` describe the
+        suffix's input ``h``; on a mesh every activation (and the head
+        output) is additionally constrained to the batch layout.
         """
-        key = (task, resume, batched, tuple(x.shape), jnp.result_type(x))
+        shape = tuple(shape)
+        dtype = jnp.dtype(dtype)
+        key = (task, resume, batched, shape, dtype)
         if key in self._compiled_fused:
             return self._compiled_fused[key]
 
@@ -264,6 +361,7 @@ class TaskGraphExecutor:
             head = jax.vmap(head, in_axes=(None, 0))
         else:
             fns = list(base_fns)
+        cst = self._act_constrainer(batched)
 
         mode = "unrolled"
         if len(suffix) >= 2 and all(f is base_fns[0] for f in base_fns):
@@ -271,20 +369,29 @@ class TaskGraphExecutor:
             specs = {_leaf_specs(p) for p in params}
             if len(specs) == 1:
                 # Same fn + same param shapes; scan also needs the carry
-                # shape to be invariant — verify without executing.
+                # shape to be invariant — verify without executing.  Only
+                # abstract-evaluation incompatibilities mean "not
+                # scannable": shape/dtype mismatches raise
+                # TypeError/ValueError, and value-dependent block fns (legal
+                # on the unjitted eager path) cannot trace abstractly at
+                # all.  Anything else is a real bug in the block fn and must
+                # surface, not silently demote the dispatch mode.
                 try:
                     spec = jax.eval_shape(
                         fns[0],
                         params[0],
-                        jax.ShapeDtypeStruct(x.shape, jnp.result_type(x)),
+                        jax.ShapeDtypeStruct(shape, dtype),
                     )
-                    if (
-                        spec.shape == tuple(x.shape)
-                        and spec.dtype == jnp.result_type(x)
-                    ):
-                        mode = "scan"
-                except Exception:
-                    mode = "unrolled"
+                except (
+                    TypeError, ValueError, jax.errors.ConcretizationTypeError
+                ):
+                    spec = None
+                if (
+                    spec is not None
+                    and spec.shape == shape
+                    and spec.dtype == dtype
+                ):
+                    mode = "scan"
 
         if mode == "scan":
             step_fn = fns[0]
@@ -292,10 +399,13 @@ class TaskGraphExecutor:
             def fused(stacked, head_p, h):
                 def step(carry, p):
                     y = step_fn(p, carry)
+                    if cst is not None:
+                        y = cst(y)
                     return y, y
 
                 h_last, acts = jax.lax.scan(step, h, stacked)
-                return acts, head(head_p, h_last)
+                out = head(head_p, h_last)
+                return acts, out if cst is None else cst(out)
 
         else:
 
@@ -303,8 +413,11 @@ class TaskGraphExecutor:
                 acts = []
                 for f, p in zip(fns, params_tuple):
                     h = f(p, h)
+                    if cst is not None:
+                        h = cst(h)
                     acts.append(h)
-                return tuple(acts), head(head_p, h)
+                out = head(head_p, h)
+                return tuple(acts), out if cst is None else cst(out)
 
         compiled = jax.jit(fused) if self._jit else fused
         self._compiled_fused[key] = (compiled, mode)
@@ -315,18 +428,20 @@ class TaskGraphExecutor:
     ) -> jnp.ndarray:
         """One dispatch for the whole (suffix + head) of ``task``."""
         graph = self.program.graph
-        fn, mode = self._fused_fn(task, resume, batched, h)
+        fn, mode = self._fused_fn(
+            task, resume, batched, tuple(h.shape), jnp.result_type(h)
+        )
         if mode == "scan":
             acts, out = fn(
                 self._stacked_suffix_params(task, resume),
-                self.program.head_params[task],
+                self._head_param(task),
                 h,
             )
             acts = [acts[i] for i in range(graph.depth - resume)]
         else:
             acts, out = fn(
                 self._suffix_params(task, resume),
-                self.program.head_params[task],
+                self._head_param(task),
                 h,
             )
         self.dispatch_count += 1
@@ -346,11 +461,11 @@ class TaskGraphExecutor:
         head_fn = self._head_fn_batch if batched else self._head_fn
         for d in range(resume, graph.depth):
             node = path[d]
-            h = block_fn(d)(self.program.node_params[node], h)
+            h = block_fn(d)(self._node_param(node), h)
             self.dispatch_count += 1
             self._activations[d] = h
             self._act_owner[d] = node
-        out = head_fn(task)(self.program.head_params[task], h)
+        out = head_fn(task)(self._head_param(task), h)
         self.dispatch_count += 1
         return out
 
@@ -406,6 +521,17 @@ class TaskGraphExecutor:
         stats.tasks_run += weight
 
         h = self._activations[resume - 1] if resume > 0 else x
+        if self.mesh is not None:
+            # Commit the suffix input to the batch layout (a no-op for
+            # cached activations, which the fused program already constrains)
+            # and account this dispatch's calibrated collective traffic —
+            # physical, once per dispatch, like the load counters.
+            h = jax.device_put(
+                h, self._batch_sharding(tuple(h.shape), batched)
+            )
+            stats.add_collectives(self.suffix_collective_bytes(
+                task, resume, tuple(h.shape), jnp.result_type(h), batched
+            ))
         if self._fused:
             return self._run_suffix_fused(task, resume, h, batched)
         return self._run_suffix_blocks(task, resume, h, batched)
@@ -509,6 +635,154 @@ class TaskGraphExecutor:
                 continue
             results[t] = self.run_task_batch(t, xs, stats, weight=v)
         return results, stats
+
+    # ------------------------------------------- collective calibration
+    def _suffix_input_sds(
+        self,
+        task: int,
+        resume: int,
+        x_shape: Tuple[int, ...],
+        dtype: Any,
+        batched: bool,
+    ) -> jax.ShapeDtypeStruct:
+        """Aval of the fused suffix's input ``h`` given the group input.
+
+        For ``resume > 0`` the suffix consumes the cached activation at
+        depth ``resume - 1``; its shape is derived by abstractly evaluating
+        blocks ``0 .. resume-1`` along the task's own path (a shared prefix
+        runs the same depth fns, so the shapes match whichever task actually
+        produced the cache).
+        """
+        key = (task, resume, tuple(x_shape), jnp.dtype(dtype), batched)
+        if key not in self._suffix_sds:
+            path = self.program.graph.path(task)
+            sds = jax.ShapeDtypeStruct(tuple(x_shape), jnp.dtype(dtype))
+            for d in range(resume):
+                fn = self.program.block_fns[d]
+                if batched:
+                    fn = jax.vmap(fn, in_axes=(None, 0))
+                sds = jax.eval_shape(fn, self.program.node_params[path[d]], sds)
+            self._suffix_sds[key] = sds
+        return self._suffix_sds[key]
+
+    def _lowered_suffix_text(
+        self,
+        task: int,
+        resume: int,
+        shape: Tuple[int, ...],
+        dtype: Any,
+        batched: bool,
+    ) -> str:
+        """Post-optimization HLO of one fused suffix dispatch.
+
+        Lowered from the same jitted program, the same placed parameters,
+        and the same committed input layout execution uses, so the analyzed
+        module is the program that runs.
+        """
+        if not (self._jit and self._fused):
+            raise ValueError(
+                "suffix HLO calibration requires the fused jitted dispatch "
+                "path (jit_blocks=True, fused=True)"
+            )
+        shape, dtype = tuple(shape), jnp.dtype(dtype)
+        key = (task, resume, batched, shape, dtype)
+        if key not in self._suffix_hlo:
+            fn, mode = self._fused_fn(task, resume, batched, shape, dtype)
+            params = (
+                self._stacked_suffix_params(task, resume) if mode == "scan"
+                else self._suffix_params(task, resume)
+            )
+            if self.mesh is not None:
+                in_sds = jax.ShapeDtypeStruct(
+                    shape, dtype,
+                    sharding=self._batch_sharding(shape, batched),
+                )
+            else:
+                in_sds = jax.ShapeDtypeStruct(shape, dtype)
+            lowered = fn.lower(params, self._head_param(task), in_sds)
+            self._suffix_hlo[key] = lowered.compile().as_text()
+        return self._suffix_hlo[key]
+
+    def suffix_hlo(
+        self, task: int, resume: int, xs: Any, batched: bool = True
+    ) -> str:
+        """HLO text of the dispatch running ``task`` from depth ``resume``
+        for group input ``xs`` — the independent-measurement hook tests use
+        to check predicted collective bytes against ``HloCostModel``."""
+        sds = self._suffix_input_sds(
+            task, resume, tuple(jnp.shape(xs)), jnp.result_type(xs), batched
+        )
+        return self._lowered_suffix_text(
+            task, resume, sds.shape, sds.dtype, batched
+        )
+
+    def suffix_collective_bytes(
+        self,
+        task: int,
+        resume: int,
+        shape: Tuple[int, ...],
+        dtype: Any,
+        batched: bool = True,
+    ) -> Dict[str, float]:
+        """Calibrated per-kind collective bytes of one suffix dispatch.
+
+        ``shape``/``dtype`` describe the suffix *input* (the activation at
+        ``resume - 1``, or the group input when ``resume == 0``).  Cached per
+        key, and the single source both the executor's counters and the cost
+        model's predictions add from — which is what makes
+        ``session.stats == session.predicted`` exact on a mesh.
+        """
+        shape, dtype = tuple(shape), jnp.dtype(dtype)
+        key = (task, resume, batched, shape, dtype)
+        if key not in self._coll_bytes:
+            from repro.launch.hlo_cost import collective_breakdown
+
+            self._coll_bytes[key] = collective_breakdown(
+                self._lowered_suffix_text(task, resume, shape, dtype, batched)
+            )
+        return self._coll_bytes[key]
+
+    def collective_view(
+        self, xs: Any, batched: bool = True
+    ) -> Optional["CollectiveView"]:
+        """A :class:`CollectiveView` bound to group input ``xs``, for
+        ``GraphCostModel.predicted_stats(..., collectives=view)``; ``None``
+        without a mesh (single-device programs have no collectives)."""
+        if self.mesh is None:
+            return None
+        return CollectiveView(
+            self, tuple(jnp.shape(xs)), jnp.result_type(xs), batched
+        )
+
+
+class CollectiveView:
+    """Per-(task, resume) calibrated collective bytes for one batch shape.
+
+    The ``CollectiveCosts`` implementation the cost model consumes: bound to
+    a group's (padded) input aval, it resolves each ``(task, resume)`` to
+    the suffix-input aval and returns the executor-cached HLO-calibrated
+    breakdown — the exact dict execution adds.
+    """
+
+    def __init__(
+        self,
+        executor: TaskGraphExecutor,
+        x_shape: Tuple[int, ...],
+        dtype: Any,
+        batched: bool = True,
+    ):
+        self._executor = executor
+        self._x_shape = tuple(x_shape)
+        self._dtype = jnp.dtype(dtype)
+        self._batched = bool(batched)
+
+    def breakdown(self, task: int, resume: int) -> Dict[str, float]:
+        sds = self._executor._suffix_input_sds(
+            task, resume, self._x_shape, self._dtype, self._batched
+        )
+        return self._executor.suffix_collective_bytes(
+            task, resume, sds.shape, sds.dtype, self._batched
+        )
 
 
 class VanillaExecutor:

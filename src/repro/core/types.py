@@ -60,6 +60,10 @@ class HardwareModel:
         """Time to bring a block's weights into the fast tier."""
         return weight_bytes / self.load_bw if self.load_bw else 0.0
 
+    def link_seconds(self, collective_bytes: float) -> float:
+        """Time the inter-chip collectives of a sharded program take."""
+        return collective_bytes / self.link_bw if self.link_bw else 0.0
+
     def energy_joules(self, flops: float, bytes_moved: float) -> float:
         return flops * self.joules_per_flop + bytes_moved * self.joules_per_byte
 
@@ -134,6 +138,12 @@ class ExecutionStats:
 
     These are the executor-side ground truth that the cost model predicts;
     tests assert the two agree.
+
+    The ``*_collective_bytes`` counters are the per-kind inter-chip traffic
+    of mesh-sharded execution, calibrated per fused-suffix dispatch from the
+    lowered HLO (``repro.launch.hlo_cost``); they stay zero on single-device
+    engines.  Flat floats (not a dict) so ``dataclasses.replace`` copies —
+    handed to every response in a group — never share mutable state.
     """
 
     blocks_executed: int = 0
@@ -144,11 +154,46 @@ class ExecutionStats:
     flops_skipped: float = 0.0
     tasks_run: int = 0
     tasks_skipped: int = 0
+    all_gather_bytes: float = 0.0
+    all_reduce_bytes: float = 0.0
+    reduce_scatter_bytes: float = 0.0
+    other_collective_bytes: float = 0.0
 
-    def seconds(self, hw: HardwareModel) -> float:
+    @property
+    def collective_bytes(self) -> float:
+        """Total inter-chip bytes across every collective kind."""
+        return (
+            self.all_gather_bytes
+            + self.all_reduce_bytes
+            + self.reduce_scatter_bytes
+            + self.other_collective_bytes
+        )
+
+    def add_collectives(self, breakdown: "dict[str, float]") -> None:
+        """Fold one dispatch's per-kind collective bytes (HLO kind names,
+        as produced by ``repro.launch.hlo_cost.collective_breakdown``)."""
+        for kind, nbytes in breakdown.items():
+            if kind == "all-gather":
+                self.all_gather_bytes += nbytes
+            elif kind == "all-reduce":
+                self.all_reduce_bytes += nbytes
+            elif kind == "reduce-scatter":
+                self.reduce_scatter_bytes += nbytes
+            else:
+                self.other_collective_bytes += nbytes
+
+    def seconds(self, hw: HardwareModel, weight_shards: int = 1) -> float:
+        """Modelled wall-clock of these counters on ``hw``.
+
+        ``weight_shards`` is how many ways the weights are sharded over the
+        mesh (``ShardingPolicy.weight_shards``): each chip streams only its
+        ``1/weight_shards`` slice, so the load term divides while the
+        (per-chip) collective traffic adds a link term.
+        """
         return (
             hw.exec_seconds(self.flops_executed)
-            + hw.load_seconds(self.weight_bytes_loaded)
+            + hw.load_seconds(self.weight_bytes_loaded / max(weight_shards, 1))
+            + hw.link_seconds(self.collective_bytes)
         )
 
     def energy(self, hw: HardwareModel) -> float:
@@ -164,4 +209,12 @@ class ExecutionStats:
             flops_skipped=self.flops_skipped + other.flops_skipped,
             tasks_run=self.tasks_run + other.tasks_run,
             tasks_skipped=self.tasks_skipped + other.tasks_skipped,
+            all_gather_bytes=self.all_gather_bytes + other.all_gather_bytes,
+            all_reduce_bytes=self.all_reduce_bytes + other.all_reduce_bytes,
+            reduce_scatter_bytes=(
+                self.reduce_scatter_bytes + other.reduce_scatter_bytes
+            ),
+            other_collective_bytes=(
+                self.other_collective_bytes + other.other_collective_bytes
+            ),
         )

@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Append rather than overwrite: the user's own XLA_FLAGS (dump dirs, CPU
+# feature flags, a test harness's device forcing) must survive.  Skip when a
+# device count is already forced — jax locks it at first init anyway.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run driver (deliverable e).
 
@@ -55,7 +62,9 @@ def run_one(
         return result
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-    t0 = time.time()
+    # Monotonic clock: these are durations, and time.time() can jump under
+    # NTP adjustment mid-compile.
+    t0 = time.perf_counter()
     try:
         with set_mesh(mesh):
             plan = make_plan(cfg, shape, mesh, policy)
@@ -69,9 +78,9 @@ def run_one(
                 donate_argnums=donate,
             )
             lowered = jitted.lower(*plan.args_sds)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()

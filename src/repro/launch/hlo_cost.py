@@ -326,3 +326,13 @@ def analyze_hlo(hlo_text: str) -> Dict[str, float]:
     }
     out.update({f"coll_{k}": v for k, v in c.coll.items()})
     return out
+
+
+def collective_breakdown(hlo_text: str) -> Dict[str, float]:
+    """Per-kind collective result bytes of one compiled HLO module.
+
+    Keys are HLO op kinds (:data:`COLLECTIVE_KINDS`), values trip-count-aware
+    byte totals — the calibration source for the serving cost model's
+    per-collective terms (``ExecutionStats.add_collectives``).
+    """
+    return dict(HloCostModel(hlo_text).cost().coll)

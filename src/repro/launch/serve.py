@@ -46,9 +46,9 @@ def main() -> None:
             feats = jnp.asarray(rng.normal(
                 size=(args.batch, args.prompt_len, cfg.enc_inputs)
             ).astype(np.float32))
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: NTP can step time.time()
         out = srv.generate(prompts, steps=args.steps, features=feats)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         print(f"arch={cfg.name} generated {out.shape[0]}x{out.shape[1]} tokens "
               f"in {dt:.1f}s ({out.size/dt:.1f} tok/s)")
         print("sample:", out[0][:16])

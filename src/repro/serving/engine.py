@@ -172,8 +172,34 @@ class MultitaskEngine:
             policy = dataclasses.replace(
                 policy, scheduler=RequestGroupScheduler()
             )
+        self.mesh = policy.mesh
+        self.sharding: Optional[ShardingPolicy] = (
+            policy.sharding if policy.sharding is not None
+            else (TP_POLICY if self.mesh is not None else None)
+        )
+        self.data_shards = (
+            self.sharding.data_shards(self.mesh) if self.sharding else 1
+        )
+        self.weight_shards = (
+            self.sharding.weight_shards(self.mesh) if self.sharding else 1
+        )
+        if self.data_shards > 1 and any(
+            s % self.data_shards for s in policy.scheduler.batch_shapes
+        ):
+            # Fold the mesh's per-shard multiple into the scheduler so every
+            # padded group splits evenly over the batch axes.
+            policy = dataclasses.replace(
+                policy,
+                scheduler=RequestGroupScheduler(
+                    batch_shapes=policy.scheduler.batch_shapes,
+                    shard_multiple=self.data_shards,
+                ),
+            )
         self.policy = policy
-        self.cost_model = GraphCostModel(program.graph, program.block_costs, hw)
+        self.cost_model = GraphCostModel(
+            program.graph, program.block_costs, hw,
+            weight_shards=self.weight_shards,
+        )
         self._cost_matrix = self.cost_model.cost_matrix()
         if order is None:
             res = optimal_order(self._cost_matrix, constraints)
@@ -181,7 +207,9 @@ class MultitaskEngine:
         self.order = tuple(order)
         if constraints is not None and not constraints.is_valid_order(self.order):
             raise ValueError("supplied order violates the constraints")
-        self.executor = TaskGraphExecutor(program)
+        self.executor = TaskGraphExecutor(
+            program, mesh=self.mesh, sharding=self.sharding
+        )
         # Cumulative counters of the most recent serve_batch call; with no
         # gates and the default greedy scheduling these equal
         # predicted_group_stats(plan_groups(requests)) computed before that
@@ -354,6 +382,10 @@ class MultitaskEngine:
             predictor.append(
                 eff, batch_size=g.valid,
                 extra_tasks_skipped=(len(self.order) - len(eff)) * g.valid,
+                collectives=(
+                    self.executor.collective_view(g.xs)
+                    if self.mesh is not None else None
+                ),
             )
         return predictor.stats
 
@@ -412,10 +444,14 @@ class MultitaskEngine:
         eff = self.group_order(group)
         resume = self.executor.residency_state() if self.warm_start else None
         predicted = self.cost_model.predicted_stats(
-            eff, batch_size=group.valid, resume=resume
+            eff, batch_size=group.valid, resume=resume,
+            collectives=self.executor.collective_view(group.xs),
         )
         warm_saved = 0.0
         if self.warm_start:
+            # Collectives are resume-independent (they key on the intra-order
+            # shared prefix), and warm_saved only reads the load counter —
+            # the cold reference needs no collective terms.
             cold_pred = self.cost_model.predicted_stats(
                 eff, batch_size=group.valid
             )
@@ -436,8 +472,11 @@ class MultitaskEngine:
         stats = execution.stats
         group = execution.group
         # Per-request share of the group's cost as executed (warm stats
-        # for a warm group) — not a cold-group estimate.
-        per_req_seconds = stats.seconds(self.hw) / max(group.valid, 1)
+        # for a warm group) — not a cold-group estimate.  On a mesh each
+        # chip streams only its weight slice, hence the shard divisor.
+        per_req_seconds = stats.seconds(
+            self.hw, weight_shards=self.weight_shards
+        ) / max(group.valid, 1)
         return [
             MultitaskResponse(
                 outputs=execution.outputs[slot],

@@ -32,9 +32,10 @@ value that can be swapped, logged, or swept.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional, Protocol, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Protocol, Tuple
 
 from repro.serving.batching import RequestGroupScheduler, effective_order
+from repro.sharding.policy import ShardingPolicy
 
 if TYPE_CHECKING:  # session/engine import this module; keep runtime acyclic
     from repro.serving.engine import MultitaskEngine
@@ -206,9 +207,20 @@ class EnginePolicy:
         engine folds back into its ``policy`` at construction so
         ``engine.policy`` alone describes the engine's full scheduling
         behavior.
+      mesh: optional ``jax.sharding.Mesh`` to shard group execution over:
+        each group's batch dimension splits across the ``sharding`` policy's
+        batch axes and the fused-suffix weights across its ``model`` /
+        ``fsdp`` axes.  The engine rounds the scheduler's batch shapes up to
+        per-shard multiples and extends cost prediction with HLO-calibrated
+        per-collective byte terms so ``session.stats == session.predicted``
+        stays exact on the mesh.
+      sharding: logical->physical axis mapping used with ``mesh``
+        (``TP_POLICY`` when unset; ``FSDP_TP_POLICY`` additionally shards
+        weights over the data axis).
 
     The defaults reproduce the pre-session engine exactly: greedy one-shot
-    admission, warm starts, cost-aware group ordering, global task order.
+    admission, warm starts, cost-aware group ordering, global task order,
+    single-device execution.
     """
 
     warm_start: bool = True
@@ -218,3 +230,5 @@ class EnginePolicy:
         default_factory=_default_scheduling
     )
     scheduler: Optional[RequestGroupScheduler] = None
+    mesh: Optional[Any] = None
+    sharding: Optional[ShardingPolicy] = None

@@ -25,7 +25,11 @@ they can overlap and be controlled independently:
 ``session.predicted`` the cost model's incremental prediction (each group
 predicted from the executor's actual residency right before it runs — the
 incremental form of ``predicted_group_stats``).  With no gates the two are
-equal, field for field, which the property tests assert.
+equal, field for field, which the property tests assert.  On a mesh-sharded
+engine (``EnginePolicy.mesh``) both sides include the per-kind collective
+bytes of every fused-suffix dispatch — calibrated once from the lowered
+HLO, added identically to counters and prediction — so the equality extends
+to ``all_gather_bytes`` / ``all_reduce_bytes`` / ``reduce_scatter_bytes``.
 
 Driving the loop: callers either poll :meth:`step` on their own cadence
 (arrival-driven serving — the admission benchmark does this on a simulated

@@ -28,21 +28,26 @@ Logical = Union[None, str, Tuple[str, ...]]
 
 
 def _ambient_mesh():
-    """The mesh installed by ``with mesh:`` / ``jax.sharding.use_mesh``."""
-    try:
-        m = jax.sharding.get_abstract_mesh()
+    """The mesh installed by ``with mesh:`` / ``jax.sharding.use_mesh``.
+
+    Only ``ImportError`` / ``AttributeError`` — the "this jax version does
+    not have that accessor" signals — mean "try the next accessor"; anything
+    else is a real failure in mesh state and must surface, not silently
+    degrade every spec to replicated.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
         if m is not None and not m.empty:
             return m
-    except Exception:
-        pass
     try:
         from jax._src import mesh as mesh_lib
 
         m = mesh_lib.thread_resources.env.physical_mesh
-        if m is not None and not m.empty:
-            return m
-    except Exception:
-        pass
+    except (ImportError, AttributeError):
+        m = None
+    if m is not None and not m.empty:
+        return m
     return None
 
 
@@ -97,6 +102,45 @@ class ShardingPolicy:
             return ax if ax in names else None
 
         return P(*[keep(self.physical(a)) for a in logical_axes])
+
+    def param_spec(self, shape: Sequence[int]) -> P:
+        """Ideal weight layout for one parameter leaf of ``shape``.
+
+        Convention for the task-graph serving path: matrices (and higher)
+        shard their first axis over ``fsdp`` (ZeRO-style, None under TP) and
+        their last axis over ``model`` (tensor parallelism); vectors and
+        scalars replicate.  Callers pass the result through
+        ``repro.sharding.utils.fit_spec`` so axes absent from the concrete
+        mesh — or not dividing the dimension — degrade to replication.
+        """
+        nd = len(shape)
+        if nd < 2:
+            return P(*([None] * nd))
+        return P(self.fsdp, *([None] * (nd - 2)), self.model)
+
+    def data_shards(self, mesh) -> int:
+        """How many ways the batch dimension splits on ``mesh`` (the
+        per-shard multiple the request-group scheduler must pad to)."""
+        if mesh is None:
+            return 1
+        names = set(mesh.axis_names)
+        n = 1
+        for a in self.batch:
+            if a in names:
+                n *= int(mesh.shape[a])
+        return n
+
+    def weight_shards(self, mesh) -> int:
+        """How many ways parameters split on ``mesh`` (the divisor on the
+        cost model's weight-load term: each chip streams only its slice)."""
+        if mesh is None:
+            return 1
+        names = set(mesh.axis_names)
+        n = 1
+        for a in sorted({a for a in (self.model, self.fsdp) if a is not None}):
+            if a in names:
+                n *= int(mesh.shape[a])
+        return n
 
 
 TP_POLICY = ShardingPolicy(name="tp", batch=("pod", "data"))

@@ -1,0 +1,16 @@
+"""Test-session environment setup.
+
+Force 8 placeholder host devices so the mesh-sharded serving tests get a
+real multi-device topology on CPU.  Must run before jax initialises (jax
+locks the device count at first init), which importing conftest before any
+test module guarantees; appended rather than assigned so externally supplied
+XLA_FLAGS survive, and skipped entirely when a device count is already
+forced (e.g. by the harness).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()

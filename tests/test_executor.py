@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (
     BlockCost, GraphCostModel, MSP430, MultitaskProgram, TaskGraphExecutor,
@@ -98,3 +99,66 @@ def test_runtime_gate_skips_dependents():
     out2, stats2 = ex.run(x, [0, 1, 2, 3], gate_none)
     assert set(out2) == {0}
     assert stats2.tasks_skipped == 3
+
+
+# ---------------------------------------------------------- scan eligibility
+
+def _program_with_block(block, dim=8, seed=0):
+    """A GRAPH program whose every depth shares one custom block fn (the
+    homogeneous shape the scan-eligibility probe triggers on)."""
+    rng = np.random.default_rng(seed)
+    costs = [BlockCost(weight_bytes=10.0, flops=1.0)] * GRAPH.depth
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)), jnp.float32)
+        for node in GRAPH.nodes()
+    }
+    heads = [lambda p, x: x @ p] * GRAPH.num_tasks
+    head_params = [
+        jnp.asarray(rng.normal(size=(dim, 3)), jnp.float32)
+        for _ in range(GRAPH.num_tasks)
+    ]
+    return MultitaskProgram(
+        GRAPH, [block] * GRAPH.depth, node_params, heads, head_params, costs
+    )
+
+
+def test_scan_probe_value_dependent_block_falls_back_to_unrolled():
+    """A value-dependent block fn cannot be abstractly traced, so the probe
+    sees ConcretizationTypeError -> the fused dispatch must fall back to
+    "unrolled" eagerly (jit_blocks=False keeps the fn itself legal) rather
+    than crash or misclassify."""
+
+    def block(p, x):
+        if float(jnp.sum(x)) >= 0:  # concretizes the tracer on purpose
+            return jnp.tanh(x @ p)
+        return jnp.tanh(x @ p) * 0.5
+
+    prog = _program_with_block(block)
+    ex = TaskGraphExecutor(prog, jit_blocks=False)
+    x = jnp.ones((8,))
+    out, _ = ex.run(x, [0, 1, 2, 3])
+    assert set(out) == {0, 1, 2, 3}
+    modes = {mode for (_fn, mode) in ex._compiled_fused.values()}
+    assert modes == {"unrolled"}
+
+
+def test_scan_probe_reraises_real_block_bugs():
+    """Regression: the probe used to catch *every* exception and silently
+    demote to unrolled — hiding genuine block-fn bugs until (or past)
+    execution.  Non-tracing errors must propagate from the probe."""
+
+    def block(p, x):
+        raise RuntimeError("boom")
+
+    prog = _program_with_block(block)
+    ex = TaskGraphExecutor(prog, jit_blocks=False)
+    with pytest.raises(RuntimeError, match="boom"):
+        ex.run(jnp.ones((8,)), [0, 1, 2, 3])
+
+
+def test_scan_probe_homogeneous_block_uses_scan():
+    prog = _program(GRAPH)
+    ex = TaskGraphExecutor(prog)
+    ex.run(jnp.ones((2, 8)), [0, 1, 2, 3])
+    modes = {mode for (_fn, mode) in ex._compiled_fused.values()}
+    assert "scan" in modes  # depth-3 suffixes of a homogeneous program

@@ -5,8 +5,10 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.hlo_cost import analyze_hlo
-from repro.sharding.policy import FSDP_TP_POLICY, TP_POLICY, shard_act
+from repro.launch.hlo_cost import analyze_hlo, collective_breakdown
+from repro.sharding.policy import (
+    FSDP_TP_POLICY, TP_POLICY, _ambient_mesh, shard_act,
+)
 from repro.sharding.utils import fit_spec, fit_specs, tree_bytes
 
 
@@ -65,6 +67,47 @@ def test_policy_axis_resolution():
         TP_POLICY.physical("bogus")
 
 
+def test_param_spec_convention():
+    # matrices: first axis -> fsdp (None under TP), last -> model
+    assert TP_POLICY.param_spec((8, 8)) == P(None, "model")
+    assert FSDP_TP_POLICY.param_spec((8, 8)) == P("data", "model")
+    assert TP_POLICY.param_spec((4, 8, 8)) == P(None, None, "model")
+    # vectors and scalars replicate
+    assert TP_POLICY.param_spec((8,)) == P(None)
+    assert FSDP_TP_POLICY.param_spec(()) == P()
+
+
+def test_data_and_weight_shard_counts():
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    assert TP_POLICY.data_shards(mesh) == 4
+    assert TP_POLICY.weight_shards(mesh) == 2
+    assert FSDP_TP_POLICY.data_shards(mesh) == 4
+    assert FSDP_TP_POLICY.weight_shards(mesh) == 8
+    pod = _FakeMesh({"pod": 2, "data": 4, "model": 2})
+    assert TP_POLICY.data_shards(pod) == 8  # batch spans ("pod", "data")
+    assert TP_POLICY.data_shards(None) == 1
+    assert TP_POLICY.weight_shards(None) == 1
+
+
+def test_ambient_mesh_propagates_accessor_failures(monkeypatch):
+    """Regression: _ambient_mesh used to swallow *every* exception, so a
+    broken mesh context silently degraded all specs to replicated.  Only
+    version-absence signals (ImportError/AttributeError on the private
+    fallback) may be swallowed; a failing public accessor must surface."""
+    def boom():
+        raise RuntimeError("mesh state corrupted")
+
+    monkeypatch.setattr(
+        jax.sharding, "get_abstract_mesh", boom, raising=False
+    )
+    with pytest.raises(RuntimeError, match="mesh state corrupted"):
+        _ambient_mesh()
+
+
+def test_ambient_mesh_none_without_context():
+    assert _ambient_mesh() is None
+
+
 # ------------------------------------------------------------------ hlo cost
 
 def test_hlo_cost_multiplies_scan_trip_count():
@@ -106,3 +149,34 @@ def test_hlo_cost_bytes_positive_and_bounded():
     nbytes = 256 * 256 * 4
     assert nbytes <= a["bytes"] <= 6 * nbytes  # in + out (+ copies)
     assert a["collective_bytes"] == 0.0
+
+
+def test_collective_breakdown_matches_analyze_hlo():
+    if jax.device_count() < 2:
+        pytest.skip("needs a multi-device host")
+    from jax.sharding import Mesh, NamedSharding
+
+    devs = np.array(jax.devices()[:2]).reshape(2)
+    mesh = Mesh(devs, ("model",))
+
+    def f(x, w):
+        return x @ w
+
+    xs = jax.ShapeDtypeStruct(
+        (16, 32), jnp.float32,
+        sharding=NamedSharding(mesh, P(None, None)),
+    )
+    ws = jax.ShapeDtypeStruct(
+        (32, 64), jnp.float32,
+        sharding=NamedSharding(mesh, P(None, "model")),
+    )
+    out_sharding = NamedSharding(mesh, P(None, None))
+    hlo = (
+        jax.jit(f, out_shardings=out_sharding)
+        .lower(xs, ws).compile().as_text()
+    )
+    bd = collective_breakdown(hlo)
+    acc = analyze_hlo(hlo)
+    assert sum(bd.values()) == acc["collective_bytes"] > 0
+    for kind, v in bd.items():
+        assert acc[f"coll_{kind}"] == v
