@@ -1,0 +1,254 @@
+"""Chaos benchmark: fault-injected multi-tenant serving on a Poisson trace.
+
+A Poisson arrival trace of multitask requests — three tenants, cycling task
+subsets, mixed priorities, and per-request deadlines — is served twice
+through SLO-aware sessions on warm engines:
+
+* **fault-free** — no injector: the goodput and output baseline;
+* **chaos** — a seeded :class:`FaultInjector` armed at the engine's
+  plan/load/dispatch boundaries with ~10% combined fault probability plus a
+  scripted burst (the first two planning entries always fail), driving the
+  session's full recovery machinery: residency rollback, bounded-backoff
+  retries, and the graceful-degradation ladder.
+
+Both runs share the identical trace, policy, and simulated clock, so the
+comparison is deterministic — the chaos schedule is a pure function of the
+injector seed and cannot flake the gates.
+
+Gates (dry-run included; any failure exits 1):
+
+* **zero stranded futures** — after the final drain, every submitted future
+  in both runs is terminal (response or typed error);
+* **output equivalence** — every request served successfully under chaos
+  returns outputs allclose to sequential fault-free single-request serving;
+* **counter exactness** — ``session.stats == session.predicted`` field for
+  field in both runs: rollbacks and retries must not leak half-executed
+  groups into either side;
+* **goodput** — requests served successfully under chaos >= ``0.8x`` the
+  fault-free count: recovery, not collapse, under a 10% fault rate.
+
+Machine-readable results land in the ``chaos_sweep`` section of
+``BENCH_serving.json``.
+
+Usage: ``PYTHONPATH=src python benchmarks/serving_chaos.py [--dry-run]``
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serving_chaos.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.common import emit, update_bench_json
+from benchmarks.serving_admission import SimClock
+from benchmarks.serving_batch import build_program
+from benchmarks.serving_groups import SUBSETS
+from repro.core import MSP430
+from repro.serving import (
+    EnginePolicy, FaultInjector, MultitaskEngine, MultitaskRequest,
+    RequestGroupScheduler, RetryPolicy, SloAwarePolicy,
+)
+
+GOODPUT_GATE = 0.8   # chaos successes >= this fraction of fault-free
+FAULT_RATES = {"plan": 0.05, "load": 0.03, "dispatch": 0.02}  # ~10% combined
+FAULT_SCRIPT = {"plan": (0, 1)}  # deterministic burst: first groups retry
+TENANTS = ("acme", "globex", "initech")
+
+
+def chaos_trace(n_requests: int, dim: int, rate: float, seed: int = 3):
+    """(arrival_time, request) pairs: Poisson arrivals, cycling subsets,
+    three tenants, mixed priorities, and deadlines on every third request
+    (arrival + a slack drawn wide enough that only scheduling pathologies
+    expire it — expiry is an SLO outcome here, not an error)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    reqs = []
+    for i in range(n_requests):
+        deadline = (
+            float(arrivals[i]) + float(rng.uniform(0.5, 2.0))
+            if i % 3 == 0 else None
+        )
+        reqs.append(MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(dim,)), jnp.float32),
+            tasks=SUBSETS[i % len(SUBSETS)],
+            deadline=deadline,
+            priority=int(i % 3),
+            tenant=TENANTS[i % len(TENANTS)],
+        ))
+    return list(zip(arrivals.tolist(), reqs))
+
+
+def run_trace(prog, trace, shapes, injector=None, settle=0.5):
+    """Serve the trace arrival-driven through an SLO-aware session."""
+    eng = MultitaskEngine(
+        prog, hw=MSP430,
+        policy=EnginePolicy(scheduling=SloAwarePolicy(
+            max_group_size=4, min_pending=8, max_wait=0.25,
+            slack_threshold=0.25,
+        )),
+        scheduler=RequestGroupScheduler(batch_shapes=shapes),
+        fault_injector=injector,
+    )
+    clock = SimClock()
+    session = eng.session(
+        clock=clock, max_pending=16, overload="shed",
+        retry=RetryPolicy(max_retries=2, degrade=True),
+        sleep=lambda s: None,  # simulated time: backoff is accounted, not slept
+    )
+    futures = []
+    for t, req in trace:
+        clock.t = t
+        futures.append(session.submit(req))
+        session.step()
+    clock.t = trace[-1][0] + settle
+    session.drain()
+    return session, futures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes (the chaos schedule is deterministic "
+                         "either way)")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="block width (default 256, dry-run 16)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default 96, dry-run 30)")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (requests per simulated second)")
+    ap.add_argument("--fault-seed", type=int, default=11,
+                    help="FaultInjector seed (schedule is a pure function "
+                         "of it)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable results file ('' disables)")
+    args = ap.parse_args(argv)
+
+    dim = args.dim or (16 if args.dry_run else 256)
+    n_req = args.requests or (30 if args.dry_run else 96)
+    shapes = (1, 2, 4)
+
+    prog = build_program(dim)
+    trace = chaos_trace(n_req, dim, args.rate)
+
+    # Sequential fault-free single-request serving: the output ground truth
+    # (SLO metadata stripped — a one-shot serve on the simulated trace's
+    # deadlines would spuriously expire them against its own clock).
+    solo = MultitaskEngine(
+        prog, hw=MSP430, warm_start=False, group_ordering=False,
+        scheduler=RequestGroupScheduler(batch_shapes=(1,)),
+    )
+    solo_resp = [
+        solo.serve(MultitaskRequest(x=r.x, tasks=r.tasks)) for _t, r in trace
+    ]
+
+    failures: list = []
+
+    def check(ok, msg):
+        if not ok:
+            failures.append(msg)
+            print(f"FAIL: {msg}", file=sys.stderr)
+
+    runs = {}
+    for name, injector in (
+        ("fault_free", None),
+        ("chaos", FaultInjector(
+            rates=FAULT_RATES, script=FAULT_SCRIPT, seed=args.fault_seed)),
+    ):
+        session, futures = run_trace(prog, trace, shapes, injector=injector)
+        # Gate: zero stranded futures — everything terminal after drain.
+        stranded = [f.seq for f in futures if not f.done()]
+        check(not stranded, f"{name}: stranded futures {stranded}")
+        # Gate: counters stay exact through rollbacks and retries.
+        check(session.stats == session.predicted,
+              f"{name}: executed counters diverge from prediction\n"
+              f"  got  {session.stats}\n  want {session.predicted}")
+        # Gate: every successful response matches the fault-free reference.
+        served = 0
+        for f, ref in zip(futures, solo_resp):
+            if f.error() is not None:
+                continue
+            served += 1
+            resp = f.result()
+            check(set(resp.outputs) == set(ref.outputs),
+                  f"{name}: request {f.seq} task set mismatch")
+            for t in ref.outputs:
+                if not np.allclose(np.asarray(resp.outputs[t]),
+                                   np.asarray(ref.outputs[t]),
+                                   rtol=1e-5, atol=1e-6):
+                    check(False,
+                          f"{name}: request {f.seq} task {t} outputs "
+                          f"diverge from fault-free serving")
+        runs[name] = {
+            "served": served,
+            "submitted": session.requests_submitted,
+            "expired": session.requests_expired,
+            "shed": session.requests_shed,
+            "rejected": session.requests_rejected,
+            "failed": session.requests_failed,
+            "groups_executed": session.groups_executed,
+            "groups_failed": session.groups_failed,
+            "group_retries": session.group_retries,
+            "degraded_runs": session.degraded_runs,
+            "backoff_seconds": session.backoff_seconds,
+            "mean_admission_wait_seconds": session.mean_admission_wait,
+            "max_admission_wait_seconds": session.max_admission_wait,
+            "weight_bytes_loaded": session.stats.weight_bytes_loaded,
+            "tenants": {
+                str(t): {
+                    "submitted": ts.submitted, "admitted": ts.admitted,
+                    "expired": ts.expired, "shed": ts.shed,
+                    "rejected": ts.rejected, "failed": ts.failed,
+                    "mean_admission_wait_seconds": ts.mean_admission_wait,
+                    "max_admission_wait_seconds": ts.max_admission_wait,
+                }
+                for t, ts in sorted(session.tenants.items(), key=lambda kv: str(kv[0]))
+            },
+        }
+        if injector is not None:
+            runs[name]["injected_faults"] = dict(injector.injected)
+            runs[name]["fault_invocations"] = dict(injector.invocations)
+        emit(f"serve_chaos_{name}", session.mean_admission_wait * 1e6,
+             f"mean_admission_wait;served={served}/{n_req};"
+             f"retries={session.group_retries};"
+             f"degraded={session.degraded_runs};"
+             f"groups_failed={session.groups_failed}")
+
+    # Gate: goodput under chaos — recovery, not collapse.
+    goodput = runs["chaos"]["served"] / max(runs["fault_free"]["served"], 1)
+    runs["chaos_goodput_vs_fault_free"] = goodput
+    check(goodput >= GOODPUT_GATE,
+          f"chaos goodput {goodput:.2f}x < {GOODPUT_GATE}x fault-free "
+          f"({runs['chaos']['served']} vs {runs['fault_free']['served']} served)")
+    # Sanity: the chaos run must actually have injected something, or the
+    # benchmark is vacuous.
+    total_injected = sum(runs["chaos"]["injected_faults"].values())
+    check(total_injected > 0, "chaos run injected zero faults")
+
+    if args.json:
+        update_bench_json(args.json, "chaos_sweep", {
+            "dim": dim, "requests": n_req, "rate": args.rate,
+            "dry_run": bool(args.dry_run), "batch_shapes": list(shapes),
+            "fault_rates": FAULT_RATES,
+            "fault_script": {k: list(v) for k, v in FAULT_SCRIPT.items()},
+            "fault_seed": args.fault_seed,
+            "goodput_gate": GOODPUT_GATE,
+            "runs": runs,
+        })
+    if failures:
+        return 1
+    print(f"# chaos goodput {goodput:.2f}x fault-free "
+          f"(>= {GOODPUT_GATE}x) with {total_injected} injected faults, "
+          f"{runs['chaos']['group_retries']} retries, "
+          f"{runs['chaos']['degraded_runs']} degraded runs, "
+          f"{runs['chaos']['groups_failed']} groups lost")
+    print("# zero stranded futures; outputs + exact counters verified in "
+          "both runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,3 +19,7 @@ python benchmarks/serving_admission.py --dry-run
 # collective-inclusive counters vs HLO measurement, and the >= 1.2x
 # modelled sharded-speedup gate on a forced 8-device CPU mesh.
 python benchmarks/serving_mesh.py --dry-run
+# Chaos sweep: fault-injected multi-tenant serving — zero stranded futures,
+# chaos-vs-fault-free output equivalence, exact counters through rollbacks
+# and retries, and the >= 0.8x goodput gate under ~10% injected faults.
+python benchmarks/serving_chaos.py --dry-run

@@ -169,6 +169,27 @@ class TaskGraphExecutor:
         self.dispatch_count = 0
         self.reset()
 
+    @property
+    def fused(self) -> bool:
+        """Whether suffixes dispatch as single fused programs (vs. the
+        per-block reference path).  Settable at any point between tasks —
+        both paths produce identical counters and (allclose-)identical
+        outputs, so flipping it never changes accounting or results; the
+        serving session's degradation ladder uses this to re-run a failed
+        fused dispatch through the reference path.  Mesh-sharded executors
+        require the fused path and reject ``False``.
+        """
+        return self._fused
+
+    @fused.setter
+    def fused(self, value: bool) -> None:
+        if not value and self.mesh is not None:
+            raise ValueError(
+                "mesh-sharded execution requires the fused dispatch path; "
+                "cannot set fused=False on a mesh executor"
+            )
+        self._fused = bool(value)
+
     # ---------------------------------------------------------------- state
     def reset(self) -> None:
         """Cold state: nothing resident, nothing cached."""

@@ -6,6 +6,12 @@ The task-graph surface is session-first: open a ``ServingSession`` on a
 under a pluggable ``SchedulingPolicy``, and resolve ``MultitaskFuture``s.
 ``serve`` / ``serve_batch`` remain as one-shot wrappers over the same
 machinery; ``serve_many`` is deprecated.
+
+Reliability lives in ``repro.serving.reliability``: typed per-request
+errors (``RequestError`` / ``DeadlineExceeded`` / ``QueueFull``), the
+group-recovery ``RetryPolicy`` (rollback + bounded backoff + degradation
+ladder), per-tenant ``TenantStats``, and the deterministic
+``FaultInjector`` the chaos benchmark drives.
 """
 from repro.serving.batching import (
     ContinuousBatcher, GenRequest, GenResult, RequestGroup,
@@ -17,7 +23,11 @@ from repro.serving.engine import (
 )
 from repro.serving.policies import (
     AffinityPolicy, EnginePolicy, GreedyBatchPolicy, SchedulingPolicy,
-    WindowPolicy,
+    SloAwarePolicy, WindowPolicy,
+)
+from repro.serving.reliability import (
+    FAULT_SITES, DeadlineExceeded, FaultInjector, InjectedFault, QueueFull,
+    RequestError, RetryPolicy, TenantStats,
 )
 from repro.serving.session import (
     AdmissionQueue, MultitaskFuture, PendingRequest, ServingSession,
@@ -40,6 +50,16 @@ __all__ = [
     "GreedyBatchPolicy",
     "WindowPolicy",
     "AffinityPolicy",
+    "SloAwarePolicy",
+    # reliability
+    "RequestError",
+    "DeadlineExceeded",
+    "QueueFull",
+    "InjectedFault",
+    "RetryPolicy",
+    "FaultInjector",
+    "TenantStats",
+    "FAULT_SITES",
     # request grouping
     "RequestGroup",
     "RequestGroupScheduler",

@@ -38,15 +38,30 @@ from repro.sharding.policy import ShardingPolicy, TP_POLICY
 
 if TYPE_CHECKING:  # session imports engine; keep the runtime import lazy
     from repro.serving.policies import SchedulingPolicy
+    from repro.serving.reliability import FaultInjector
     from repro.serving.session import ServingSession
 
 
 @dataclasses.dataclass
 class MultitaskRequest:
-    """One inference request: an input and the tasks it wants."""
+    """One inference request: an input, the tasks it wants, and its SLOs.
+
+    The SLO fields are advisory metadata the *session* layer acts on; the
+    engine's execution path ignores them (they never change what computes):
+
+    ``deadline`` is an absolute time on the session's clock by which the
+    request must have been admitted for planning — a pump finding it overdue
+    fails its future with :class:`~repro.serving.reliability.DeadlineExceeded`
+    instead of planning it.  ``priority`` orders load shedding (higher wins)
+    when a bounded session queue overflows.  ``tenant`` labels the request
+    for per-tenant quota and admission-wait accounting.
+    """
 
     x: Any
     tasks: Optional[Sequence[int]] = None  # None = all tasks
+    deadline: Optional[float] = None       # session-clock absolute seconds
+    priority: int = 0                      # higher survives shedding longer
+    tenant: Optional[str] = None           # quota / wait-accounting label
 
 
 @dataclasses.dataclass
@@ -85,6 +100,13 @@ class MultitaskResponse:
     group_size: int = 1
     warm_weight_bytes_saved: float = 0.0
     effective_order: Tuple[int, ...] = ()
+    # Recovery provenance (set by the session's reliability layer):
+    # ``retries`` = failed attempts before the one that produced this
+    # response; ``degraded`` names the fallback-ladder rung that succeeded
+    # ("unfused" = per-block reference dispatch, "single_device" = off-mesh
+    # fallback executor), ``None`` for the primary path.
+    retries: int = 0
+    degraded: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -151,6 +173,7 @@ class MultitaskEngine:
         warm_start: Optional[bool] = None,
         group_ordering: Optional[bool] = None,
         policy: Optional[EnginePolicy] = None,
+        fault_injector: Optional["FaultInjector"] = None,
     ):
         self.program = program
         self.hw = hw
@@ -210,6 +233,14 @@ class MultitaskEngine:
         self.executor = TaskGraphExecutor(
             program, mesh=self.mesh, sharding=self.sharding
         )
+        # Deterministic chaos hook (see repro.serving.reliability): when
+        # set, ``check`` is called at the plan/load/dispatch boundaries and
+        # may raise.  Mutable on purpose — the chaos harness arms and
+        # disarms it around specific traces.
+        self.fault_injector = fault_injector
+        # Lazily built off-mesh executor for the degradation ladder's
+        # "single_device" rung (mesh engines only; see execute_group_fallback).
+        self._fallback_executor: Optional[TaskGraphExecutor] = None
         # Cumulative counters of the most recent serve_batch call; with no
         # gates and the default greedy scheduling these equal
         # predicted_group_stats(plan_groups(requests)) computed before that
@@ -244,12 +275,15 @@ class MultitaskEngine:
         self,
         policy: Optional["SchedulingPolicy"] = None,
         clock: Optional[Callable[[], float]] = None,
+        **kwargs: Any,
     ) -> "ServingSession":
         """Open a :class:`~repro.serving.session.ServingSession` on this
-        engine (``policy`` defaults to ``self.policy.scheduling``)."""
+        engine (``policy`` defaults to ``self.policy.scheduling``).  Extra
+        keyword arguments — ``max_pending``, ``overload``, ``retry``, … —
+        forward to the session constructor."""
         from repro.serving.session import ServingSession
 
-        return ServingSession(self, policy=policy, clock=clock)
+        return ServingSession(self, policy=policy, clock=clock, **kwargs)
 
     # ------------------------------------------------------------- planning
     def plan_groups(
@@ -390,23 +424,38 @@ class MultitaskEngine:
         return predictor.stats
 
     # ------------------------------------------------------------ execution
+    def _inject(self, site: str, **context: Any) -> None:
+        """Fault-injection hook: delegates to :attr:`fault_injector` when
+        armed (see ``repro.serving.reliability.FaultInjector``); a no-op
+        otherwise.  Sites sit at boundaries where an injected exception is
+        indistinguishable from a real one to the session's rollback/retry
+        machinery."""
+        if self.fault_injector is not None:
+            self.fault_injector.check(site, **context)
+
     def _run_group(
-        self, group: RequestGroup, eff: Sequence[int]
+        self,
+        group: RequestGroup,
+        eff: Sequence[int],
+        executor: Optional[TaskGraphExecutor] = None,
     ) -> Tuple[List[Dict[int, jax.Array]], ExecutionStats]:
         """Execute one homogeneous request group through the batched path.
 
-        ``eff`` is the group's execution order (see :meth:`group_order`).
-        Gates are evaluated per request row against that row's outputs so
-        far.  A task runs (batched, once) when any row's gate fires; rows
-        whose gate did not fire simply drop the task's output — exact,
-        because a task's output depends only on its input row.  Flop/task
-        counters are weighted by the fired-row count.  With uniform gate
-        outcomes this equals the sequential per-request accounting; when
-        outcomes diverge within a group, a partially-fired task's cached
-        activations shorten the suffix of later tasks for *every* row, so
-        the group can legitimately account fewer executed flops than the
-        sum of solo serves — batching does strictly less work there.
+        ``eff`` is the group's execution order (see :meth:`group_order`);
+        ``executor`` defaults to the engine's own (the degradation ladder
+        passes the off-mesh fallback executor instead).  Gates are evaluated
+        per request row against that row's outputs so far.  A task runs
+        (batched, once) when any row's gate fires; rows whose gate did not
+        fire simply drop the task's output — exact, because a task's output
+        depends only on its input row.  Flop/task counters are weighted by
+        the fired-row count.  With uniform gate outcomes this equals the
+        sequential per-request accounting; when outcomes diverge within a
+        group, a partially-fired task's cached activations shorten the
+        suffix of later tasks for *every* row, so the group can legitimately
+        account fewer executed flops than the sum of solo serves — batching
+        does strictly less work there.
         """
+        ex = executor if executor is not None else self.executor
         v = group.valid
         per_request: List[Dict[int, jax.Array]] = [dict() for _ in range(v)]
         stats = ExecutionStats()
@@ -418,7 +467,8 @@ class MultitaskEngine:
             stats.tasks_skipped += v - fired
             if fired == 0:
                 continue
-            out = self.executor.run_task_batch(t, group.xs, stats, weight=fired)
+            self._inject("dispatch", task=t, group_tasks=group.tasks)
+            out = ex.run_task_batch(t, group.xs, stats, weight=fired)
             for i in range(v):
                 if fire[i]:
                     per_request[i][t] = out[i]
@@ -435,6 +485,7 @@ class MultitaskEngine:
         so the session can defer future resolution behind the next group's
         planning.
         """
+        self._inject("plan", group_tasks=group.tasks, valid=group.valid)
         if self.warm_start:
             # Warm boundary: keep residency, never the previous group's
             # activations (they belong to different inputs).
@@ -459,10 +510,40 @@ class MultitaskEngine:
                 cold_pred.weight_bytes_loaded - predicted.weight_bytes_loaded
             )
         predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
+        self._inject("load", group_tasks=group.tasks, resume=resume)
         per_request, stats = self._run_group(group, eff)
         return GroupExecution(
             group=group, eff=eff, outputs=per_request, stats=stats,
             predicted=predicted, warm_saved=warm_saved,
+        )
+
+    def execute_group_fallback(self, group: RequestGroup) -> GroupExecution:
+        """Degradation-ladder rung for mesh engines: run ``group`` cold on a
+        lazily built single-device executor.
+
+        The fallback executor shares the program (and therefore produces
+        identical outputs) but has no mesh, so its counters carry no
+        collective bytes — and its prediction, computed cold without a
+        collective view from the *same* cost model, matches those counters
+        field for field (``weight_shards`` only scales derived seconds,
+        never the byte counters).  It is reset before every use: degraded
+        runs are the rare recovery path, and a cold run keeps the primary
+        executor's rolled-back residency authoritative for every subsequent
+        group's incremental prediction.
+        """
+        if self._fallback_executor is None:
+            self._fallback_executor = TaskGraphExecutor(self.program)
+        ex = self._fallback_executor
+        ex.reset()
+        eff = self.group_order(group)
+        predicted = self.cost_model.predicted_stats(
+            eff, batch_size=group.valid
+        )
+        predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
+        per_request, stats = self._run_group(group, eff, executor=ex)
+        return GroupExecution(
+            group=group, eff=eff, outputs=per_request, stats=stats,
+            predicted=predicted, warm_saved=0.0,
         )
 
     def _group_responses(

@@ -8,7 +8,7 @@ inspects the admission queue (and, through the engine, the cost model and
 the executor's current weight residency) and returns the pending requests to
 admit as the next planning batch — or nothing, to keep accumulating.
 
-Three policies ship:
+Four policies ship:
 
 * :class:`GreedyBatchPolicy` — admit everything pending at once.  This is
   the pre-session ``serve_batch`` semantics: one plan over the whole
@@ -22,6 +22,10 @@ Three policies ship:
   least to resume from the executor's *current* residency (deepest shared
   prefix with whatever just ran).  The paper's switching-cost idea applied
   at admission time, before grouping or ordering ever see the requests.
+* :class:`SloAwarePolicy` — affinity admission with SLO overrides: a
+  request whose deadline slack has run out (or a tenant starving behind a
+  residency-friendly stream) pre-empts the cheapest-resume choice, and
+  oversubscribed buckets admit priority-first.
 
 :class:`EnginePolicy` folds everything schedule-shaped about the engine —
 the old ``warm_start`` / ``group_ordering`` constructor flags, the request
@@ -176,6 +180,119 @@ class AffinityPolicy:
             ),
         )
         return queue.pop_seqs(p.seq for p in best[: self.max_group_size])
+
+
+@dataclasses.dataclass(frozen=True)
+class SloAwarePolicy:
+    """Deadline- and tenant-aware admission layered over residency affinity.
+
+    :class:`AffinityPolicy` minimises switching cost but is SLO-blind: a
+    bucket whose requests are about to miss their deadlines waits exactly as
+    long as one with no deadline at all, and a tenant whose subsets never
+    match the resident prefix can starve indefinitely behind a tenant whose
+    subsets always do.  This policy keeps affinity as the *default* choice
+    and overrides it only when an SLO is actually at risk — trading
+    residency affinity against deadline slack, per the roadmap's
+    multi-tenant item:
+
+    1. **urgency** — if any pending request's slack (``deadline - now``)
+       is at most ``slack_threshold``, admission fires immediately and the
+       bucket containing the most urgent request (minimum slack) is chosen,
+       regardless of resume cost.  A near-deadline request never waits for
+       a cheaper bucket to finish warming.
+    2. **anti-starvation** — otherwise, if some tenant's oldest pending
+       request has waited at least ``starvation_wait`` seconds, the bucket
+       holding the longest-waiting such request is chosen.  One tenant's
+       residency-friendly stream cannot lock out another's forever.
+    3. **affinity** — otherwise the bucket with the cheapest
+       ``resume_load_cost`` from the executor's current residency wins,
+       exactly as :class:`AffinityPolicy` scores it.
+
+    Within the chosen bucket, admission is priority-descending (then
+    arrival order), up to ``max_group_size`` — so when a bucket is
+    oversubscribed, high-priority requests ride the earlier group.
+
+    Firing thresholds mirror :class:`AffinityPolicy` (``min_pending`` /
+    ``max_wait`` / flush), with the urgency rule as an additional trigger:
+    a pump that finds an at-risk request admits even below the thresholds.
+    """
+
+    max_group_size: int = 16
+    min_pending: Optional[int] = None
+    max_wait: Optional[float] = None
+    slack_threshold: float = 0.0
+    starvation_wait: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_group_size < 1:
+            raise ValueError(f"max_group_size must be >= 1, got {self.max_group_size}")
+        if self.slack_threshold < 0:
+            raise ValueError(
+                f"slack_threshold must be >= 0, got {self.slack_threshold}"
+            )
+        if self.starvation_wait is not None and self.starvation_wait < 0:
+            raise ValueError(
+                f"starvation_wait must be >= 0, got {self.starvation_wait}"
+            )
+
+    def admit(self, queue, engine, now, flush):
+        if not queue:
+            return []
+        pending = queue.pending
+        urgent = [
+            p for p in pending if p.slack(now) <= self.slack_threshold
+        ]
+        aged = (
+            self.max_wait is not None
+            and now - queue.oldest_arrival() >= self.max_wait
+        )
+        threshold = (
+            self.min_pending if self.min_pending is not None
+            else self.max_group_size
+        )
+        if not (flush or urgent or aged or len(queue) >= threshold):
+            return []
+        buckets: Dict[object, List["PendingRequest"]] = {}
+        for p in pending:
+            buckets.setdefault(p.subset, []).append(p)
+
+        if urgent:
+            # Rule 1: serve the most at-risk request's bucket now.
+            pick = min(urgent, key=lambda p: (p.slack(now), p.seq))
+            chosen = buckets[pick.subset]
+        else:
+            starving = (
+                [
+                    p for p in pending
+                    if now - p.arrival >= self.starvation_wait
+                ]
+                if self.starvation_wait is not None else []
+            )
+            if starving:
+                # Rule 2: longest-waiting request breaks the affinity lock.
+                pick = min(starving, key=lambda p: (p.arrival, p.seq))
+                chosen = buckets[pick.subset]
+            else:
+                # Rule 3: residency affinity, as AffinityPolicy scores it.
+                resident = engine.executor.residency_state()
+
+                def resume_cost(subset) -> float:
+                    tasks = effective_order(engine.order, subset)
+                    if not tasks:
+                        return 0.0
+                    return min(
+                        engine.cost_model.resume_load_cost(resident, t)
+                        for t in tasks
+                    )
+
+                _key, chosen = min(
+                    buckets.items(),
+                    key=lambda kv: (resume_cost(kv[0]), kv[1][0].seq),
+                )
+        take = sorted(chosen, key=lambda p: (-p.priority, p.seq))
+        return queue.pop_seqs(
+            p.seq for p in take[: self.max_group_size]
+        )
 
 
 def _default_scheduling() -> SchedulingPolicy:

@@ -8,8 +8,8 @@ they can overlap and be controlled independently:
   time and returns a lightweight :class:`MultitaskFuture` immediately; an
   :class:`AdmissionQueue` accumulates pending requests under a pluggable
   :class:`~repro.serving.policies.SchedulingPolicy` that decides *when* a
-  batch fires and *which* requests ride in it (greedy, windowed, or
-  residency-affine);
+  batch fires and *which* requests ride in it (greedy, windowed,
+  residency-affine, or SLO-aware);
 * **planning** — each admitted batch goes through the engine's full
   planning stack (subset bucketing, padding, cost-aware group ordering,
   optional per-plan order re-solving).  Planning is pure host work: because
@@ -31,6 +31,39 @@ bytes of every fused-suffix dispatch — calibrated once from the lowered
 HLO, added identically to counters and prediction — so the equality extends
 to ``all_gather_bytes`` / ``all_reduce_bytes`` / ``reduce_scatter_bytes``.
 
+Reliability (see :mod:`repro.serving.reliability`): the session is the
+fault boundary of the serving stack, and its unit of failure is the
+*group*, not the pump.
+
+* **Deadlines** — a request with ``MultitaskRequest.deadline`` set is
+  expired at the top of every pump once the session clock passes it:
+  its future fails with :class:`DeadlineExceeded` and it never reaches
+  planning.
+* **Backpressure** — ``max_pending`` bounds the admission queue (and
+  ``max_pending_per_tenant`` each tenant's share of it).  An over-limit
+  submission is either rejected (its future fails immediately with
+  :class:`QueueFull`) or, under ``overload="shed"``, admitted by evicting
+  the lowest-priority pending request — strictly lower priority than the
+  newcomer, youngest first — whose future fails with ``QueueFull(shed=
+  True)`` instead.  Either way every submitted future reaches a terminal
+  state; nothing blocks and nothing is silently dropped.
+* **Failure isolation + crash-consistent recovery** — before each group
+  executes, the executor's residency is snapshotted; if the group raises
+  anywhere (planning prediction, weight load, dispatch, a user gate), the
+  snapshot is rolled back (``set_residency``) so no half-loaded state
+  leaks, and the group is retried under the session's
+  :class:`~repro.serving.reliability.RetryPolicy`: bounded exponential
+  backoff on the primary path, then the graceful-degradation ladder
+  (re-run with fused dispatch off; re-run a sharded plan on a single
+  device).  Each retry re-enters ``engine._execute_group``, which
+  re-predicts the group from the *actual* post-rollback residency — so
+  ``session.stats == session.predicted`` stays exact, field for field,
+  across any number of rollbacks and retries (only successful attempts
+  are merged into either side).  A group that exhausts the ladder fails
+  only its own futures — each with a :class:`RequestError` carrying the
+  request's ``seq``, task subset, tenant, and group id, the original
+  traceback chained — and the pump moves on to the next group.
+
 Driving the loop: callers either poll :meth:`step` on their own cadence
 (arrival-driven serving — the admission benchmark does this on a simulated
 Poisson trace), call :meth:`flush` to force one admit-everything pass, or
@@ -44,10 +77,13 @@ import collections
 import dataclasses
 import time
 from typing import (
-    TYPE_CHECKING, Callable, Deque, Iterable, List, Optional, Tuple,
+    TYPE_CHECKING, Callable, Deque, Dict, Iterable, List, Optional, Tuple,
 )
 
 from repro.core.types import ExecutionStats
+from repro.serving.reliability import (
+    DeadlineExceeded, QueueFull, RequestError, RetryPolicy, TenantStats,
+)
 
 if TYPE_CHECKING:
     from repro.serving.engine import (
@@ -65,9 +101,13 @@ class MultitaskFuture:
     response are JAX arrays and may still be materialising on-device;
     reading them blocks as usual.)
 
-    A future whose admitted batch failed mid-pump (planning or execution
-    raised after its request left the queue) is *failed*, not stranded:
-    ``done()`` reports True and ``result()`` re-raises the original error.
+    A future is *terminal* when ``done()`` is True: either resolved with a
+    response, or failed — rejected/shed by backpressure, expired past its
+    deadline, or riding in a group whose recovery ladder ran out.  A failed
+    future's ``result()`` re-raises the recorded
+    :class:`~repro.serving.reliability.RequestError` (original traceback
+    chained); ``error()`` peeks at it without raising.  Futures are never
+    stranded: after ``drain()`` every submitted future is terminal.
     """
 
     __slots__ = ("_session", "seq", "_response", "_error")
@@ -80,6 +120,10 @@ class MultitaskFuture:
 
     def done(self) -> bool:
         return self._response is not None or self._error is not None
+
+    def error(self) -> Optional[BaseException]:
+        """The recorded failure, or ``None`` (also when still pending)."""
+        return self._error
 
     def result(self) -> "MultitaskResponse":
         if not self.done():
@@ -120,6 +164,24 @@ class PendingRequest:
     future: MultitaskFuture
     subset: object = None
 
+    @property
+    def deadline(self) -> Optional[float]:
+        return self.request.deadline
+
+    @property
+    def priority(self) -> int:
+        return self.request.priority
+
+    @property
+    def tenant(self) -> Optional[str]:
+        return self.request.tenant
+
+    def slack(self, now: float) -> float:
+        """Seconds until this request's deadline (``inf`` without one)."""
+        if self.request.deadline is None:
+            return float("inf")
+        return self.request.deadline - now
+
 
 class AdmissionQueue:
     """FIFO of pending requests with policy-directed selective removal.
@@ -152,6 +214,10 @@ class AdmissionQueue:
             raise ValueError("queue is empty")
         return self._entries[0].arrival
 
+    def tenant_count(self, tenant: Optional[str]) -> int:
+        """Number of pending entries belonging to ``tenant``."""
+        return sum(1 for e in self._entries if e.tenant == tenant)
+
     def pop_all(self) -> List[PendingRequest]:
         out, self._entries = self._entries, []
         return out
@@ -182,9 +248,27 @@ class ServingSession:
         correctness).
       policy: the admission :class:`SchedulingPolicy`; defaults to the
         engine's configured ``EnginePolicy.scheduling``.
-      clock: time source for arrival stamps and wait/window decisions
-        (``time.monotonic`` by default; benchmarks inject simulated clocks,
-        and every public method also accepts an explicit ``now``).
+      clock: time source for arrival stamps, deadlines, and wait/window
+        decisions (``time.monotonic`` by default; benchmarks inject
+        simulated clocks, and every public method also accepts an explicit
+        ``now``).
+      max_pending: bound on the admission queue (``None`` = unbounded).
+        Over-limit submissions are rejected or shed per ``overload``.
+      max_pending_per_tenant: per-tenant share of the queue (``None`` =
+        no per-tenant quota); enforced the same way, with shedding
+        restricted to the offending tenant's own entries.
+      overload: ``"reject"`` fails the incoming future with
+        :class:`QueueFull`; ``"shed"`` evicts the lowest-priority pending
+        entry with priority strictly below the newcomer's (youngest first)
+        and admits the newcomer — falling back to reject when no such
+        victim exists.
+      retry: the group-recovery :class:`RetryPolicy` (rollback + bounded
+        backoff + degradation ladder).  ``RetryPolicy(max_retries=0,
+        degrade=False)`` fails a group on its first error — still isolated
+        to that group, never the whole pump.
+      sleep: backoff sleep hook (``time.sleep``); tests and simulated-clock
+        benchmarks inject a no-op.  Never called when the policy's
+        backoff base is 0.
     """
 
     def __init__(
@@ -192,27 +276,61 @@ class ServingSession:
         engine: "MultitaskEngine",
         policy: Optional["SchedulingPolicy"] = None,
         clock: Optional[Callable[[], float]] = None,
+        max_pending: Optional[int] = None,
+        max_pending_per_tenant: Optional[int] = None,
+        overload: str = "reject",
+        retry: Optional[RetryPolicy] = None,
+        sleep: Optional[Callable[[float], None]] = None,
     ):
+        if overload not in ("reject", "shed"):
+            raise ValueError(
+                f"overload must be 'reject' or 'shed', got {overload!r}"
+            )
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if max_pending_per_tenant is not None and max_pending_per_tenant < 1:
+            raise ValueError(
+                f"max_pending_per_tenant must be >= 1, "
+                f"got {max_pending_per_tenant}"
+            )
         self.engine = engine
         self.policy = policy if policy is not None else engine.policy.scheduling
         self._clock = clock if clock is not None else time.monotonic
         self.queue = AdmissionQueue()
+        self.max_pending = max_pending
+        self.max_pending_per_tenant = max_pending_per_tenant
+        self.overload = overload
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._sleep = sleep if sleep is not None else time.sleep
         self._seq = 0
         # ------------------------------------------------- running counters
         self.stats = ExecutionStats()       # executed, cumulative
         self.predicted = ExecutionStats()   # all-gates-fire prediction
         self.requests_submitted = 0
         self.requests_admitted = 0
+        self.requests_rejected = 0
+        self.requests_shed = 0
+        self.requests_expired = 0
+        self.requests_failed = 0
         self.admission_rounds = 0
         self.groups_executed = 0
+        self.groups_failed = 0
+        self.group_retries = 0          # failed attempts that were retried
+        self.degraded_runs = 0          # groups served by a ladder rung
+        self.plan_failures = 0          # planning batches that failed whole
+        self.backoff_seconds = 0.0      # total retry backoff slept
         self.plan_seconds = 0.0
+        self._group_seq = 0             # session-unique execution-group ids
         # Admission-latency tracking: running aggregates over every admitted
         # request (exact for the session's whole lifetime) plus a bounded
         # window of recent samples — a long-lived session must not grow a
-        # per-request list forever.
+        # per-request list forever.  ``tenants`` keeps the same exact
+        # aggregates per tenant label (None = untenanted), so quota/SLO
+        # policies can observe per-tenant starvation the global mean hides.
         self.waits: Deque[float] = collections.deque(maxlen=self.WAITS_WINDOW)
         self.wait_sum = 0.0
         self.wait_max = 0.0
+        self.tenants: Dict[Optional[str], TenantStats] = {}
 
     #: recent admission-latency samples kept in ``waits`` (aggregates in
     #: ``wait_sum`` / ``wait_max`` / ``mean_admission_wait`` cover all).
@@ -230,6 +348,20 @@ class ServingSession:
         """Max admission latency over every request ever admitted."""
         return self.wait_max
 
+    def tenant_stats(self, tenant: Optional[str]) -> TenantStats:
+        """This tenant's exact admission aggregates (created on first use)."""
+        if tenant not in self.tenants:
+            self.tenants[tenant] = TenantStats()
+        return self.tenants[tenant]
+
+    def tenant_mean_admission_wait(self, tenant: Optional[str]) -> float:
+        """Mean admission latency over ``tenant``'s admitted requests."""
+        return self.tenant_stats(tenant).mean_admission_wait
+
+    def tenant_max_admission_wait(self, tenant: Optional[str]) -> float:
+        """Max admission latency over ``tenant``'s admitted requests."""
+        return self.tenant_stats(tenant).max_admission_wait
+
     # ------------------------------------------------------------ admission
     def _now(self, now: Optional[float]) -> float:
         return self._clock() if now is None else float(now)
@@ -243,15 +375,86 @@ class ServingSession:
         :meth:`drain`) lets the scheduling policy admit it — that is what
         makes one-shot ``serve_batch`` (submit all, then drain) plan the
         whole list as a single batch.
+
+        ``submit`` never raises for capacity: when the bounded queue (or
+        the tenant's quota) is full and shedding finds no lower-priority
+        victim, the returned future is already failed with
+        :class:`QueueFull` — terminal immediately, so callers and load
+        generators handle overload through the same future surface as
+        every other outcome.
         """
         fut = MultitaskFuture(self, self._seq)
-        self.queue.push(PendingRequest(
+        entry = PendingRequest(
             seq=self._seq, request=request, arrival=self._now(now), future=fut,
             subset=self.engine.normalized_subset(request.tasks),
-        ))
+        )
         self._seq += 1
         self.requests_submitted += 1
+        tstats = self.tenant_stats(entry.tenant)
+        tstats.submitted += 1
+        if self._admit_to_queue(entry):
+            self.queue.push(entry)
         return fut
+
+    def _admit_to_queue(self, entry: PendingRequest) -> bool:
+        """Backpressure gate: may shed a victim or fail ``entry``'s future.
+
+        Returns True when ``entry`` should be queued.  Quotas are checked
+        innermost-first: the tenant's own share, then the global bound —
+        shedding for a tenant-quota breach only ever evicts that tenant's
+        entries, so one tenant's burst cannot push out another's work.
+        """
+        if self.max_pending_per_tenant is not None:
+            if self.queue.tenant_count(entry.tenant) >= \
+                    self.max_pending_per_tenant:
+                if not self._try_shed(entry, tenant_scope=True):
+                    self._reject(entry, scope="tenant quota")
+                    return False
+        if self.max_pending is not None and len(self.queue) >= self.max_pending:
+            if not self._try_shed(entry, tenant_scope=False):
+                self._reject(entry, scope="queue")
+                return False
+        return True
+
+    def _try_shed(self, entry: PendingRequest, tenant_scope: bool) -> bool:
+        """Evict the weakest strictly-lower-priority pending entry.
+
+        Victim selection: lowest priority first, youngest arrival within a
+        priority class (the oldest have waited longest and are closest to
+        admission).  Only entries with priority *strictly below* the
+        newcomer's qualify — shedding equals for a newcomer would let two
+        same-priority streams evict each other forever.
+        """
+        if self.overload != "shed":
+            return False
+        candidates = [
+            e for e in self.queue.pending
+            if e.priority < entry.priority
+            and (not tenant_scope or e.tenant == entry.tenant)
+        ]
+        if not candidates:
+            return False
+        victim = min(candidates, key=lambda e: (e.priority, -e.seq))
+        self.queue.pop_seqs([victim.seq])
+        self.requests_shed += 1
+        self.tenant_stats(victim.tenant).shed += 1
+        victim.future._fail(QueueFull(
+            f"request {victim.seq} shed for a priority-{entry.priority} "
+            f"arrival (own priority {victim.priority})",
+            shed=True, seq=victim.seq, tasks=victim.subset,
+            tenant=victim.tenant,
+        ))
+        return True
+
+    def _reject(self, entry: PendingRequest, scope: str) -> None:
+        self.requests_rejected += 1
+        self.tenant_stats(entry.tenant).rejected += 1
+        entry.future._fail(QueueFull(
+            f"request {entry.seq} rejected: {scope} full "
+            f"(max_pending={self.max_pending}, "
+            f"max_pending_per_tenant={self.max_pending_per_tenant})",
+            seq=entry.seq, tasks=entry.subset, tenant=entry.tenant,
+        ))
 
     # ------------------------------------------------------------- pumping
     def step(self, now: Optional[float] = None) -> List["MultitaskResponse"]:
@@ -266,7 +469,14 @@ class ServingSession:
         return self._pump(self._now(now), flush=True)
 
     def drain(self) -> List["MultitaskResponse"]:
-        """Serve until nothing is pending."""
+        """Serve until nothing is pending.
+
+        Always terminates with every submitted future terminal: responses
+        for served requests, typed failures for everything else (expired,
+        shed, or in a group whose recovery ladder ran out).  Failures do
+        not raise here — they are delivered through the futures — so one
+        poisoned request can never wedge the drain of a multi-tenant queue.
+        """
         out = self.flush()
         if self.queue:
             raise RuntimeError(
@@ -280,8 +490,43 @@ class ServingSession:
     def pending_count(self) -> int:
         return len(self.queue)
 
+    def _expire_deadlines(self, now: float) -> None:
+        """Fail every pending request whose deadline has passed.
+
+        Runs at the top of each pump, before the policy sees the queue, so
+        an overdue request is never planned, never pads a group, and never
+        counts toward admission-wait aggregates — its future fails with
+        :class:`DeadlineExceeded` and the queue entry is removed.
+        """
+        expired = [
+            e for e in self.queue.pending
+            if e.deadline is not None and e.deadline <= now
+        ]
+        if not expired:
+            return
+        self.queue.pop_seqs(e.seq for e in expired)
+        for e in expired:
+            self.requests_expired += 1
+            self.tenant_stats(e.tenant).expired += 1
+            e.future._fail(DeadlineExceeded(
+                f"request {e.seq} missed its deadline "
+                f"({e.request.deadline:.6g}) at t={now:.6g} before planning",
+                seq=e.seq, tasks=e.subset, tenant=e.tenant,
+            ))
+
+    def _record_wait(self, entry: PendingRequest, now: float) -> None:
+        wait = now - entry.arrival
+        self.waits.append(wait)
+        self.wait_sum += wait
+        self.wait_max = max(self.wait_max, wait)
+        tstats = self.tenant_stats(entry.tenant)
+        tstats.admitted += 1
+        tstats.wait_sum += wait
+        tstats.wait_max = max(tstats.wait_max, wait)
+
     def _pump(self, now: float, flush: bool) -> List["MultitaskResponse"]:
         completed: List["MultitaskResponse"] = []
+        self._expire_deadlines(now)
         while True:
             admitted = self.policy.admit(self.queue, self.engine, now, flush)
             if not admitted:
@@ -289,10 +534,7 @@ class ServingSession:
             self.admission_rounds += 1
             self.requests_admitted += len(admitted)
             for p in admitted:
-                wait = now - p.arrival
-                self.waits.append(wait)
-                self.wait_sum += wait
-                self.wait_max = max(self.wait_max, wait)
+                self._record_wait(p, now)
             try:
                 # Planning (bucketing, group-ordering TSP, per-plan
                 # re-solve) is host-only work; any previously dispatched
@@ -302,37 +544,149 @@ class ServingSession:
                 groups = self.engine.plan_groups(
                     [p.request for p in admitted])
                 self.plan_seconds += time.perf_counter() - t0
-                for group in groups:
-                    members = tuple(admitted[slot] for slot in group.indices)
-                    execution = self.engine._execute_group(group)
-                    self.groups_executed += 1
-                    self.stats = self.stats.merge(execution.stats)
-                    self.predicted = self.predicted.merge(execution.predicted)
-                    # Resolve immediately: building responses is
-                    # non-blocking host work (outputs are unsynced JAX
-                    # arrays, the modelled seconds come from counters), so
-                    # deferring resolution would buy no extra overlap —
-                    # and an exception in a later group must not strand
-                    # futures whose group already ran.
-                    completed.extend(self._resolve(execution, members))
-            except BaseException as err:
-                # The admitted entries already left the queue; anything not
-                # yet resolved would otherwise be stranded forever.  Fail
-                # those futures so result() re-raises the cause instead of
-                # reporting an inexplicable unresolved request.
-                for p in admitted:
-                    if not p.future.done():
-                        p.future._fail(err)
-                raise
+            except Exception as err:
+                # Planning failed before any group existed: group
+                # membership is unknown, so the whole admitted batch fails
+                # — but only this batch.  The queue, the executor, and the
+                # counters are untouched (planning mutates none of them),
+                # so the session keeps serving.
+                self.plan_failures += 1
+                self._fail_batch(admitted, err, group_id=None)
+                continue
+            for group in groups:
+                group_id = self._group_seq
+                self._group_seq += 1
+                members = tuple(admitted[slot] for slot in group.indices)
+                execution, retries, degraded = self._run_group_guarded(
+                    group, members, group_id)
+                if execution is None:
+                    continue  # ladder exhausted; members already failed
+                self.groups_executed += 1
+                self.stats = self.stats.merge(execution.stats)
+                self.predicted = self.predicted.merge(execution.predicted)
+                # Resolve immediately: building responses is non-blocking
+                # host work (outputs are unsynced JAX arrays, the modelled
+                # seconds come from counters), so deferring resolution
+                # would buy no extra overlap — and a failure in a later
+                # group must not strand futures whose group already ran.
+                completed.extend(self._resolve(
+                    execution, members, retries=retries, degraded=degraded))
         return completed
+
+    # ------------------------------------------------- failure recovery
+    def _run_group_guarded(
+        self,
+        group,
+        members: Tuple[PendingRequest, ...],
+        group_id: int,
+    ) -> Tuple[Optional["GroupExecution"], int, Optional[str]]:
+        """Execute one group with rollback, bounded retries, and the
+        degradation ladder.  Returns ``(execution, failed_attempts,
+        degraded_rung)``; ``execution`` is ``None`` when every rung failed
+        (the members' futures are failed before returning).
+
+        Each attempt snapshots the executor's residency first and rolls it
+        back on failure, so a half-loaded crash state never leaks into the
+        next attempt's (or the next group's) incremental prediction —
+        ``engine._execute_group`` re-predicts every attempt from the
+        executor's *actual* residency, which is what keeps
+        ``session.stats == session.predicted`` exact through recoveries.
+        """
+        retry = self.retry
+        failures = 0
+        last_err: Optional[BaseException] = None
+        for attempt in range(1 + retry.max_retries):
+            if attempt > 0:
+                self.group_retries += 1
+                pause = retry.backoff_seconds(attempt - 1)
+                if pause > 0.0:
+                    self.backoff_seconds += pause
+                    self._sleep(pause)
+            try:
+                return self._attempt_group(group), failures, None
+            except Exception as err:
+                failures += 1
+                last_err = err
+        if retry.degrade:
+            if self.engine.mesh is None and self.engine.executor.fused:
+                # Rung: unrolled per-block reference dispatch on the primary
+                # executor — identical counters, identical outputs, no fused
+                # program in the failure path.
+                self.engine.executor.fused = False
+                try:
+                    execution = self._attempt_group(group)
+                    self.degraded_runs += 1
+                    return execution, failures, "unfused"
+                except Exception as err:
+                    failures += 1
+                    last_err = err
+                finally:
+                    self.engine.executor.fused = True
+            elif self.engine.mesh is not None:
+                # Rung: cold single-device run on the engine's off-mesh
+                # fallback executor (sharded plans cannot unfuse).
+                snapshot = self.engine.executor.residency_state()
+                try:
+                    execution = self.engine.execute_group_fallback(group)
+                    self.degraded_runs += 1
+                    return execution, failures, "single_device"
+                except Exception as err:
+                    failures += 1
+                    last_err = err
+                    self.engine.executor.set_residency(snapshot)
+        self.groups_failed += 1
+        self._fail_batch(members, last_err, group_id=group_id)
+        return None, failures, None
+
+    def _attempt_group(self, group) -> "GroupExecution":
+        """One execution attempt with crash-consistent rollback.
+
+        The residency snapshot taken here is the state every cost
+        prediction after this group will be computed from if the attempt
+        fails — restoring it on *any* exception is what makes a mid-group
+        crash invisible to the counter-exactness invariant.
+        """
+        snapshot = self.engine.executor.residency_state()
+        try:
+            return self.engine._execute_group(group)
+        except BaseException:
+            self.engine.executor.set_residency(snapshot)
+            raise
+
+    def _fail_batch(
+        self,
+        entries: Tuple[PendingRequest, ...],
+        err: Optional[BaseException],
+        group_id: Optional[int],
+    ) -> None:
+        """Fail every unresolved entry with its own chained RequestError."""
+        where = (
+            "planning" if group_id is None else f"execution group {group_id}"
+        )
+        for p in entries:
+            if p.future.done():
+                continue
+            self.requests_failed += 1
+            self.tenant_stats(p.tenant).failed += 1
+            wrapped = RequestError(
+                f"request {p.seq} (tasks={sorted(p.subset) if p.subset else 'all'}) "
+                f"failed in {where}: {err!r}",
+                seq=p.seq, tasks=p.subset, tenant=p.tenant, group_id=group_id,
+            )
+            wrapped.__cause__ = err  # chain the original traceback
+            p.future._fail(wrapped)
 
     def _resolve(
         self,
         execution: "GroupExecution",
         members: Tuple[PendingRequest, ...],
+        retries: int = 0,
+        degraded: Optional[str] = None,
     ) -> List["MultitaskResponse"]:
         """Build responses for one executed group and fill its futures."""
         responses = self.engine._group_responses(execution)
         for entry, response in zip(members, responses):
+            response.retries = retries
+            response.degraded = degraded
             entry.future._set(response)
         return responses

@@ -26,7 +26,8 @@ from repro.core.ordering import solve_suborder
 from repro.core.task_graph import TaskGraph
 from repro.serving import (
     AffinityPolicy, EnginePolicy, GreedyBatchPolicy, MultitaskEngine,
-    MultitaskRequest, RequestGroupScheduler, ServingSession, WindowPolicy,
+    MultitaskRequest, RequestError, RequestGroupScheduler, RetryPolicy,
+    ServingSession, WindowPolicy,
 )
 
 try:
@@ -176,26 +177,32 @@ def test_serve_many_deprecated_but_equivalent():
                 rtol=1e-5, atol=1e-6)
 
 
-def test_pump_failure_fails_futures_instead_of_stranding():
-    # A mid-pump failure (here: a gate that raises during execution) must
-    # not strand admitted futures — they fail with the original error.
+def test_pump_failure_isolated_to_failing_group():
+    # A mid-pump failure (here: a gate that raises during execution) is
+    # isolated to the failing *group*: its futures fail with a typed
+    # RequestError chaining the original exception, drain() does not
+    # raise, and requests in other groups are served normally.
     def bad_gate(outputs):
         raise ValueError("gate exploded")
 
     rng = np.random.default_rng(14)
     eng = MultitaskEngine(PROGRAM, hw=MSP430, gates={1: bad_gate},
                           order=[0, 1, 2, 3])
-    session = eng.session()
+    session = eng.session(retry=RetryPolicy(max_retries=0, degrade=False))
     f_ok = session.submit(MultitaskRequest(  # no task 1: gate never runs
         x=jnp.asarray(rng.normal(size=(DIM,)), jnp.float32), tasks=(0,)))
     f_bad = session.submit(MultitaskRequest(
         x=jnp.asarray(rng.normal(size=(DIM,)), jnp.float32)))
-    with pytest.raises(ValueError, match="gate exploded"):
-        session.drain()
+    session.drain()  # must NOT raise: the failure rides the futures
     # Every admitted future is terminal: resolved or failed, never stuck.
     assert f_ok.done() and f_bad.done()
-    with pytest.raises(ValueError, match="gate exploded"):
+    assert f_ok.error() is None and f_ok.result().outputs.keys() == {0}
+    with pytest.raises(RequestError, match="gate exploded") as exc:
         f_bad.result()
+    assert isinstance(exc.value.__cause__, ValueError)
+    assert exc.value.seq == f_bad.seq
+    assert exc.value.group_id is not None
+    assert session.groups_failed == 1 and session.requests_failed == 1
 
 
 def test_drain_raises_on_noncompliant_policy():
