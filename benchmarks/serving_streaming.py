@@ -1,0 +1,202 @@
+"""Weight-streaming sweep: double-buffered prefetch vs synchronous loads.
+
+A load-bound multi-group trace (many distinct task subsets on MSP430-class
+hardware, where streaming a block's weights costs ~2x executing it) is
+served twice through warm engines that differ in exactly one policy bit:
+
+* **synchronous** — the PR-7 path: every non-resident block is loaded
+  synchronously when its group reaches it;
+* **streamed** — ``EnginePolicy.streaming``: while group *k*'s fused suffix
+  executes (JAX dispatch is asynchronous), the session stages group
+  *k+1*'s non-resident block params through the executor's
+  :class:`~repro.core.executor.WeightStreamer`.  The prefetch schedule is
+  the cost model's ``plan_loads`` over the executor's actual residency, so
+  the streamed bytes equal the group's loads by construction; load time
+  exceeding the previous group's modelled compute window shows up as
+  ``ExecutionStats.stream_stall_seconds``.
+
+A sequential single-request serve provides the output ground truth.
+
+Gates (dry-run included; any failure exits 1):
+
+* **output equivalence** — streamed responses allclose to the synchronous
+  session's and to sequential solo serving;
+* **counter exactness** — ``session.stats == session.predicted`` field for
+  field in both runs, *including* the new ``prefetched_bytes`` /
+  ``stream_stall_seconds`` counters;
+* **coverage** — the streamed run prefetched a nonzero byte volume (every
+  group after the first, on this trace);
+* **overlap** — streamed stall seconds <= ``0.5x`` the synchronous run's
+  weight-load seconds: the stream hides loads, it does not rename them;
+* **speedup** — >= ``1.2x`` modelled wall-clock improvement on the
+  load-bound trace.
+
+Machine-readable results land in the ``streaming_sweep`` section of
+``BENCH_serving.json``.
+
+Usage: ``PYTHONPATH=src python benchmarks/serving_streaming.py [--dry-run]``
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serving_streaming.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.common import emit, update_bench_json
+from benchmarks.serving_batch import build_program
+from benchmarks.serving_groups import SUBSETS, build_requests
+from repro.core import MSP430
+from repro.serving import (
+    EnginePolicy, MultitaskEngine, MultitaskRequest, RequestGroupScheduler,
+)
+
+STALL_GATE = 0.5     # streamed stall <= this x synchronous load seconds
+SPEEDUP_GATE = 1.2   # modelled wall-clock: sync / streamed >= this
+
+
+def run_session(prog, reqs, shapes, streaming: bool):
+    """One-shot warm session over ``reqs``; returns (session, responses)."""
+    eng = MultitaskEngine(
+        prog, hw=MSP430,
+        policy=EnginePolicy(streaming=streaming),
+        scheduler=RequestGroupScheduler(batch_shapes=shapes),
+    )
+    session = eng.session()
+    futures = [session.submit(r) for r in reqs]
+    session.drain()
+    responses = [f.result() for f in futures]
+    jax.block_until_ready([list(r.outputs.values()) for r in responses])
+    return session, responses
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes (gates are identical either way)")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="block width (default 256, dry-run 16)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default 64, dry-run 24)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable results file ('' disables)")
+    args = ap.parse_args(argv)
+
+    dim = args.dim or (16 if args.dry_run else 256)
+    n_req = args.requests or (24 if args.dry_run else 64)
+    shapes = (1, 2, 4)
+    hw = MSP430
+
+    prog = build_program(dim)
+    reqs = build_requests(n_req, dim)
+
+    # Sequential single-request serving: the output ground truth.
+    solo = MultitaskEngine(
+        prog, hw=hw, warm_start=False, group_ordering=False,
+        scheduler=RequestGroupScheduler(batch_shapes=(1,)),
+    )
+    solo_resp = [solo.serve(MultitaskRequest(x=r.x, tasks=r.tasks))
+                 for r in reqs]
+
+    failures: list = []
+
+    def check(ok, msg):
+        if not ok:
+            failures.append(msg)
+            print(f"FAIL: {msg}", file=sys.stderr)
+
+    runs = {}
+    sessions = {}
+    for name, streaming in (("synchronous", False), ("streamed", True)):
+        session, responses = run_session(prog, reqs, shapes, streaming)
+        sessions[name] = session
+        # Gate: counters stay exact including the streaming fields.
+        check(session.stats == session.predicted,
+              f"{name}: executed counters diverge from prediction\n"
+              f"  got  {session.stats}\n  want {session.predicted}")
+        # Gate: every response matches sequential solo serving.
+        for i, (resp, ref) in enumerate(zip(responses, solo_resp)):
+            check(set(resp.outputs) == set(ref.outputs),
+                  f"{name}: request {i} task set mismatch")
+            for t in ref.outputs:
+                if not np.allclose(np.asarray(resp.outputs[t]),
+                                   np.asarray(ref.outputs[t]),
+                                   rtol=1e-5, atol=1e-6):
+                    check(False, f"{name}: request {i} task {t} outputs "
+                                 f"diverge from solo serving")
+        stats = session.stats
+        runs[name] = {
+            "weight_bytes_loaded": stats.weight_bytes_loaded,
+            "weight_bytes_skipped": stats.weight_bytes_skipped,
+            "prefetched_bytes": stats.prefetched_bytes,
+            "stream_stall_seconds": stats.stream_stall_seconds,
+            "compute_seconds": stats.compute_seconds(hw),
+            "modelled_seconds": stats.seconds(hw),
+            "groups_executed": session.groups_executed,
+            "prefetches_issued": session.prefetches_issued,
+            "prefetch_scheduled_bytes": session.prefetch_scheduled_bytes,
+            "prefetch_failures": session.prefetch_failures,
+            "streamer_cancels": session.engine.executor.streamer.cancels,
+        }
+
+    sync, strm = sessions["synchronous"], sessions["streamed"]
+    # Sanity: streaming changes when bytes move, never how many.
+    check(strm.stats.weight_bytes_loaded == sync.stats.weight_bytes_loaded,
+          "streamed run loaded a different byte volume than synchronous")
+    check(sync.stats.prefetched_bytes == 0.0
+          and sync.stats.stream_stall_seconds == 0.0,
+          "synchronous run carries streaming counters")
+    # Gate: the stream actually ran.
+    check(strm.stats.prefetched_bytes > 0.0,
+          "streamed run prefetched zero bytes — the sweep is vacuous")
+
+    # Gate: overlap — stall must be far below what the loads cost to do
+    # synchronously (the whole point of hiding them behind compute).
+    sync_load_seconds = hw.load_seconds(sync.stats.weight_bytes_loaded)
+    stall = strm.stats.stream_stall_seconds
+    check(stall <= STALL_GATE * sync_load_seconds,
+          f"stream stall {stall:.6f}s > {STALL_GATE}x synchronous load "
+          f"seconds ({sync_load_seconds:.6f}s)")
+
+    # Gate: modelled wall-clock speedup on the load-bound trace.
+    sync_seconds = sync.stats.seconds(hw)
+    strm_seconds = strm.stats.seconds(hw)
+    speedup = sync_seconds / strm_seconds
+    runs["speedup_streamed_vs_synchronous"] = speedup
+    runs["stall_vs_sync_load"] = stall / sync_load_seconds
+    check(speedup >= SPEEDUP_GATE,
+          f"streamed speedup {speedup:.2f}x < {SPEEDUP_GATE}x "
+          f"({sync_seconds:.6f}s vs {strm_seconds:.6f}s)")
+
+    emit("serve_streaming_sync", sync_seconds * 1e6,
+         f"modelled_seconds;loads={sync.stats.weight_bytes_loaded:.0f}B")
+    emit("serve_streaming_streamed", strm_seconds * 1e6,
+         f"modelled_seconds;prefetched={strm.stats.prefetched_bytes:.0f}B;"
+         f"stall={stall * 1e6:.1f}us;speedup={speedup:.2f}x")
+
+    if args.json:
+        update_bench_json(args.json, "streaming_sweep", {
+            "dim": dim, "requests": n_req, "dry_run": bool(args.dry_run),
+            "batch_shapes": list(shapes), "subsets": [list(s) for s in SUBSETS],
+            "hw": hw.name,
+            "stall_gate": STALL_GATE, "speedup_gate": SPEEDUP_GATE,
+            "runs": runs,
+        })
+    if failures:
+        return 1
+    print(f"# streamed {speedup:.2f}x faster modelled ({SPEEDUP_GATE}x gate); "
+          f"stall {stall * 1e6:.1f}us = "
+          f"{stall / sync_load_seconds:.3f}x sync load seconds "
+          f"({STALL_GATE}x gate)")
+    print("# outputs + exact counters (incl. prefetched_bytes / "
+          "stream_stall_seconds) verified in both runs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

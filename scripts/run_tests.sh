@@ -23,3 +23,7 @@ python benchmarks/serving_mesh.py --dry-run
 # chaos-vs-fault-free output equivalence, exact counters through rollbacks
 # and retries, and the >= 0.8x goodput gate under ~10% injected faults.
 python benchmarks/serving_chaos.py --dry-run
+# Weight-streaming sweep: streamed-vs-synchronous output equivalence, exact
+# counters including prefetched_bytes / stream_stall_seconds, the <= 0.5x
+# stall-vs-sync-load gate, and the >= 1.2x modelled-speedup gate.
+python benchmarks/serving_streaming.py --dry-run

@@ -22,6 +22,7 @@ from repro.core.executor import (
     MultitaskProgram,
     TaskGraphExecutor,
     VanillaExecutor,
+    WeightStreamer,
     run_in_order,
 )
 from repro.core.genetic import GAConfig, genetic_order

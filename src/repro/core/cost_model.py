@@ -276,6 +276,68 @@ class GraphCostModel:
         """An incremental predictor for incrementally-admitted plans."""
         return PlanPredictor(self, resume=resume, carry_residency=carry_residency)
 
+    def plan_loads(
+        self,
+        order: Sequence[int],
+        resident: Optional[Residency] = None,
+    ) -> List[Tuple[int, NodeId]]:
+        """The ``(depth, node)`` weight loads executing ``order`` will issue.
+
+        Walks the same residency simulation as :meth:`_predict_into`, but
+        instead of aggregating counters it returns the exact load sequence —
+        every block that is *not* resident when its task reaches it.  This is
+        the prefetch schedule the :class:`~repro.core.executor.WeightStreamer`
+        stages for the next group: staging precisely this set makes the
+        executor's ``prefetched_bytes`` counter equal the group's
+        ``weight_bytes_loaded`` by construction, which is what keeps
+        streaming prediction exact.
+
+        ``resident`` is the residency at the start of the plan (``None`` =
+        cold).  The returned list is in execution order and free of
+        duplicates: an order that *revisits* an evicted block (interleaved
+        subtrees, e.g. ``[0, 3, 1]``) re-loads it — and ``predicted_stats``
+        counts those bytes twice — but the streamer stages one copy per
+        node and the executor commits it at most once, so the schedule
+        lists each node once, at its first load.  The revisit falls through
+        to a synchronous load on both the predicted and executed side.
+        """
+        state: List[Optional[NodeId]] = (
+            list(resident) if resident is not None else [None] * self.graph.depth
+        )
+        if len(state) != self.graph.depth:
+            raise ValueError(
+                f"resident has {len(state)} slots, expected {self.graph.depth}"
+            )
+        loads: List[Tuple[int, NodeId]] = []
+        staged: set = set()
+        prev: Optional[int] = None
+        for t in order:
+            path = self.graph.path(t)
+            shared = (
+                self.graph.shared_prefix_depth(prev, t) if prev is not None else 0
+            )
+            for d in range(shared, self.graph.depth):
+                if state[d] != path[d] and path[d] not in staged:
+                    loads.append((d, path[d]))
+                    staged.add(path[d])
+                state[d] = path[d]
+            prev = t
+        return loads
+
+    def prefetch_stall_seconds(
+        self, depths: Sequence[int], overlap_seconds: float
+    ) -> float:
+        """Modelled stall of streaming ``depths``' loads behind a compute
+        window of ``overlap_seconds``.
+
+        The double-buffered streamer moves the bytes while the *previous*
+        group computes; whatever does not fit in that window stalls the next
+        group's start.  Load terms use :meth:`load_cost`, so sharded weights
+        stream one slice per chip exactly as the synchronous path models.
+        """
+        total = sum(self.load_cost(d) for d in depths)
+        return max(total - max(overlap_seconds, 0.0), 0.0)
+
     def residency_after(
         self, order: Sequence[int], resident: Optional[Residency] = None
     ) -> Tuple[Optional[NodeId], ...]:
@@ -340,6 +402,7 @@ class PlanPredictor:
         batch_size: int = 1,
         extra_tasks_skipped: int = 0,
         collectives: Optional["CollectiveCosts"] = None,
+        overlap_seconds: Optional[float] = None,
     ) -> ExecutionStats:
         """Account one more admitted group; returns that group's delta.
 
@@ -348,13 +411,31 @@ class PlanPredictor:
         cumulative prediction matches the engine's counters field-for-field.
         ``collectives`` adds the mesh-sharded collective bytes of this
         group's dispatches (see ``GraphCostModel.predicted_stats``).
+
+        ``overlap_seconds`` (not ``None``) predicts a *streamed* group: the
+        group's loads were prefetched behind a compute window of that many
+        seconds, so the delta's ``prefetched_bytes`` equals its loaded bytes
+        and ``stream_stall_seconds`` is whatever portion of the load time
+        did not fit in the window (``GraphCostModel.prefetch_stall_seconds``).
         """
         if not self.carry_residency:
             self._resident = [None] * self.model.graph.depth
+        loads = (
+            self.model.plan_loads(order, self._resident)
+            if overlap_seconds is not None
+            else []
+        )
         delta = ExecutionStats()
         self.model._predict_into(
             order, int(batch_size), self._resident, delta, collectives
         )
+        if overlap_seconds is not None and loads:
+            delta.prefetched_bytes = sum(
+                self.model.block_costs[d].weight_bytes for d, _node in loads
+            )
+            delta.stream_stall_seconds = self.model.prefetch_stall_seconds(
+                [d for d, _node in loads], overlap_seconds
+            )
         delta.tasks_skipped += int(extra_tasks_skipped)
         self.stats = self.stats.merge(delta)
         self.groups += 1

@@ -52,7 +52,9 @@ whole group.  The batched counters match
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    Any, Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +106,132 @@ def _leaf_specs(params: Any) -> Tuple:
     """(treedef, leaf shapes/dtypes) fingerprint for stackability checks."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
     return treedef, tuple((jnp.shape(l), jnp.result_type(l)) for l in leaves)
+
+
+class WeightStreamer:
+    """Double-buffered asynchronous host->device weight stager.
+
+    One staging slot per executor: :meth:`stage` issues non-blocking
+    ``jax.device_put`` copies for the *next* plan's non-resident block
+    params (JAX dispatch is asynchronous, so the transfers overlap with
+    whatever fused suffix is still executing on the device), replacing any
+    previous batch — stage(k+1) while executing k is the double buffer.
+
+    Commit-on-use: a staged copy only becomes the executor's parameter for
+    its node when the executor actually loads that node
+    (:meth:`commit`, called from the load branch of ``_run_task_impl``).
+    Until then nothing observable changes, so cancellation —
+    :meth:`cancel` on a fresh stage, :meth:`invalidate` from
+    ``TaskGraphExecutor.reset`` / ``set_residency`` — simply drops the
+    staged copies and composes with the serving session's residency
+    snapshot/rollback: a rolled-back group retries with an empty streamer
+    and loads synchronously, keeping counters exact.
+
+    Stall accounting is modelled, not measured: the caller stages the batch
+    together with the cost model's residual
+    (``GraphCostModel.prefetch_stall_seconds`` — load seconds minus the
+    overlap window); :meth:`finish_group` returns that stall iff the group
+    consumed any staged copy, and the engine adds it to the group's
+    ``ExecutionStats.stream_stall_seconds``.
+
+    The ``lax.scan`` fused path reads its stacked per-suffix parameter
+    cache (``_stacked_suffix_params``) rather than per-node params, so
+    committed copies are bypassed there — values are identical either way;
+    only the unrolled/per-block paths physically consume the staged
+    arrays.  Accounting is dispatch-mode independent regardless.
+    """
+
+    def __init__(self, executor: "TaskGraphExecutor"):
+        self._executor = executor
+        self._staged: Dict[NodeId, Any] = {}
+        self._committed_since_stage = False
+        #: Modelled stall (seconds) of the pending staged batch: the part of
+        #: its load time that did not fit in the overlap window.
+        self.pending_stall_seconds = 0.0
+        # Lifetime telemetry (not part of ExecutionStats: these describe the
+        # streamer mechanism, not the logical execution counters).
+        self.prefetches = 0
+        self.staged_bytes = 0.0
+        self.committed_bytes = 0.0
+        self.cancels = 0
+
+    def staged_nodes(self) -> FrozenSet[NodeId]:
+        """Nodes with a staged (uncommitted) copy in flight."""
+        return frozenset(self._staged)
+
+    def stage(
+        self,
+        loads: Sequence[Tuple[int, NodeId]],
+        stall_seconds: float = 0.0,
+    ) -> None:
+        """Issue async copies for ``loads`` (``GraphCostModel.plan_loads``
+        entries), replacing any previously staged batch."""
+        self.cancel()
+        ex = self._executor
+        for depth, node in loads:
+            params = ex.program.node_params[node]
+            if ex.mesh is not None:
+                copy = jax.tree_util.tree_map(ex._place_param_leaf, params)
+            else:
+                copy = jax.tree_util.tree_map(jax.device_put, params)
+            self._staged[node] = copy
+            self.staged_bytes += ex.program.block_costs[depth].weight_bytes
+        if loads:
+            self.prefetches += 1
+            self.pending_stall_seconds = float(stall_seconds)
+
+    def commit(self, node: NodeId) -> bool:
+        """Adopt ``node``'s staged copy as its parameters, if one exists.
+
+        Called exactly where the executor accounts a weight load; ``True``
+        means the load's bytes arrived via the prefetch stream (the caller
+        counts them in ``ExecutionStats.prefetched_bytes``).
+        """
+        copy = self._staged.pop(node, None)
+        if copy is None:
+            return False
+        ex = self._executor
+        if ex.mesh is not None:
+            ex._placed_node[node] = copy
+        else:
+            ex._streamed_node[node] = copy
+        self._committed_since_stage = True
+        self.committed_bytes += ex.program.block_costs[node[0]].weight_bytes
+        return True
+
+    def finish_group(self) -> float:
+        """Close out the staged batch after its group ran.
+
+        Returns the batch's modelled stall when the group committed any of
+        it (the stream was on this group's critical path), else ``0.0``;
+        uncommitted leftovers (e.g. gated-off tasks) are dropped — the next
+        prefetch re-plans from actual residency.
+        """
+        stall = (
+            self.pending_stall_seconds if self._committed_since_stage else 0.0
+        )
+        self._staged.clear()
+        self.pending_stall_seconds = 0.0
+        self._committed_since_stage = False
+        return stall
+
+    def cancel(self) -> None:
+        """Drop the staged (uncommitted) batch and its pending stall."""
+        if self._staged or self.pending_stall_seconds:
+            self.cancels += 1
+        self._staged.clear()
+        self.pending_stall_seconds = 0.0
+        self._committed_since_stage = False
+
+    def invalidate(self) -> None:
+        """Cancel staging *and* drop committed single-device copies.
+
+        The residency boundary hook (``reset`` / ``set_residency``): after
+        a rollback or cold reset no streamed state — staged or already
+        committed — may outlive the residency it was planned against.
+        """
+        self.cancel()
+        self._executor._streamed_node.clear()
 
 
 class TaskGraphExecutor:
@@ -158,6 +286,13 @@ class TaskGraphExecutor:
         # Mesh-placed parameter copies (input-independent; survive reset).
         self._placed_node: Dict[NodeId, Any] = {}
         self._placed_head: Dict[int, Any] = {}
+        # Streamed-and-committed single-device parameter copies (the mesh
+        # path commits into _placed_node instead); value-identical to
+        # program.node_params, dropped at every residency boundary.
+        self._streamed_node: Dict[NodeId, Any] = {}
+        # Double-buffered host->device weight prefetcher (serving engines
+        # drive it when EnginePolicy.streaming is on; idle otherwise).
+        self.streamer = WeightStreamer(self)
         # Calibration caches: suffix-input avals, lowered HLO text, and the
         # per-kind collective bytes the cost model adds per dispatch.
         self._suffix_sds: Dict[Tuple, jax.ShapeDtypeStruct] = {}
@@ -192,9 +327,10 @@ class TaskGraphExecutor:
 
     # ---------------------------------------------------------------- state
     def reset(self) -> None:
-        """Cold state: nothing resident, nothing cached."""
+        """Cold state: nothing resident, nothing cached, nothing streamed."""
         depth = self.program.graph.depth
         self._resident: List[Optional[NodeId]] = [None] * depth
+        self.streamer.invalidate()
         self.clear_activations()
 
     def clear_activations(self) -> None:
@@ -223,10 +359,15 @@ class TaskGraphExecutor:
         return tuple(self._resident)
 
     def set_residency(self, state: Sequence[Optional[NodeId]]) -> None:
-        """Restore a residency snapshot (testing / replay helper).
+        """Restore a residency snapshot (rollback / replay helper).
 
         Only weight residency is restored; activations are always cleared —
         they belong to a specific input, which a snapshot does not carry.
+        Any in-flight prefetch is cancelled and committed streamed copies
+        dropped (:meth:`WeightStreamer.invalidate`): a snapshot restore is
+        the crash-recovery rollback boundary, after which no streamed state
+        planned against the pre-rollback residency may survive — the next
+        attempt loads synchronously and stays counter-exact.
         """
         depth = self.program.graph.depth
         if len(state) != depth:
@@ -234,6 +375,7 @@ class TaskGraphExecutor:
                 f"residency state has {len(state)} slots, expected {depth}"
             )
         self._resident = list(state)
+        self.streamer.invalidate()
         self.clear_activations()
 
     def _guard_act_shape(self, shape: Tuple[int, ...]) -> None:
@@ -284,6 +426,9 @@ class TaskGraphExecutor:
 
     def _node_param(self, node: NodeId) -> Any:
         if self.mesh is None:
+            streamed = self._streamed_node.get(node)
+            if streamed is not None:
+                return streamed
             return self.program.node_params[node]
         if node not in self._placed_node:
             self._placed_node[node] = jax.tree_util.tree_map(
@@ -530,6 +675,11 @@ class TaskGraphExecutor:
                 stats.flops_skipped += weight * bc.flops
                 continue
             if self._resident[d] != node:
+                if self.streamer.commit(node):
+                    # The bytes still count as loaded — they moved — but
+                    # arrived over the prefetch stream, overlapped with the
+                    # previous group's compute.
+                    stats.prefetched_bytes += bc.weight_bytes
                 stats.weight_bytes_loaded += bc.weight_bytes
                 self._resident[d] = node
             else:

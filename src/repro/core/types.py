@@ -158,6 +158,13 @@ class ExecutionStats:
     all_reduce_bytes: float = 0.0
     reduce_scatter_bytes: float = 0.0
     other_collective_bytes: float = 0.0
+    # Weight-streaming counters (``core.executor.WeightStreamer``): bytes of
+    # ``weight_bytes_loaded`` that arrived via an asynchronous prefetch
+    # overlapped with the previous group's compute, and the residual stall
+    # (modelled seconds) where the prefetch outran its overlap window.  Both
+    # stay zero on engines without ``EnginePolicy.streaming``.
+    prefetched_bytes: float = 0.0
+    stream_stall_seconds: float = 0.0
 
     @property
     def collective_bytes(self) -> float:
@@ -182,6 +189,19 @@ class ExecutionStats:
             else:
                 self.other_collective_bytes += nbytes
 
+    def compute_seconds(self, hw: HardwareModel) -> float:
+        """Modelled compute + interconnect seconds (no weight-load term).
+
+        This is the window an overlapped weight stream can hide behind: the
+        prefetcher for group ``k+1`` runs while group ``k``'s fused suffix
+        executes, so this group's compute window bounds how many of the next
+        group's load bytes come for free.
+        """
+        return (
+            hw.exec_seconds(self.flops_executed)
+            + hw.link_seconds(self.collective_bytes)
+        )
+
     def seconds(self, hw: HardwareModel, weight_shards: int = 1) -> float:
         """Modelled wall-clock of these counters on ``hw``.
 
@@ -189,11 +209,19 @@ class ExecutionStats:
         mesh (``ShardingPolicy.weight_shards``): each chip streams only its
         ``1/weight_shards`` slice, so the load term divides while the
         (per-chip) collective traffic adds a link term.
+
+        With streaming, ``prefetched_bytes`` of the loads were overlapped
+        with earlier compute and drop out of the synchronous load term; what
+        could not be hidden is already accounted as ``stream_stall_seconds``
+        — i.e. per group the modelled time is
+        ``max(compute, overlapped_load) + sync_load`` expressed as
+        ``compute + stall + sync_load``.
         """
+        sync_bytes = max(self.weight_bytes_loaded - self.prefetched_bytes, 0.0)
         return (
-            hw.exec_seconds(self.flops_executed)
-            + hw.load_seconds(self.weight_bytes_loaded / max(weight_shards, 1))
-            + hw.link_seconds(self.collective_bytes)
+            self.compute_seconds(hw)
+            + hw.load_seconds(sync_bytes / max(weight_shards, 1))
+            + self.stream_stall_seconds
         )
 
     def energy(self, hw: HardwareModel) -> float:
@@ -216,5 +244,9 @@ class ExecutionStats:
             ),
             other_collective_bytes=(
                 self.other_collective_bytes + other.other_collective_bytes
+            ),
+            prefetched_bytes=self.prefetched_bytes + other.prefetched_bytes,
+            stream_stall_seconds=(
+                self.stream_stall_seconds + other.stream_stall_seconds
             ),
         )

@@ -63,7 +63,7 @@ def main() -> None:
         step_fn = jax.jit(make_train_step(model, opt_cfg, policy))
         it = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(args.steps):
             tokens = jnp.asarray(next(it))
             if cfg.family == "encdec":
@@ -78,7 +78,7 @@ def main() -> None:
                 print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
                       f"lr {float(metrics['lr']):.2e} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"({time.time()-t0:.0f}s)")
+                      f"({time.perf_counter()-t0:.0f}s)")
         if args.ckpt:
             save_checkpoint(args.ckpt, {"params": params}, step=args.steps)
             print(f"saved {args.ckpt}")

@@ -218,6 +218,12 @@ class MultitaskEngine:
                     shard_multiple=self.data_shards,
                 ),
             )
+        if policy.streaming and not policy.warm_start:
+            raise ValueError(
+                "EnginePolicy.streaming requires warm_start: a cold engine "
+                "resets the executor before every group, which cancels any "
+                "staged prefetch — nothing could ever stream"
+            )
         self.policy = policy
         self.cost_model = GraphCostModel(
             program.graph, program.block_costs, hw,
@@ -257,6 +263,10 @@ class MultitaskEngine:
     @property
     def group_ordering(self) -> bool:
         return self.policy.group_ordering
+
+    @property
+    def streaming(self) -> bool:
+        return self.policy.streaming
 
     @property
     def scheduler(self) -> RequestGroupScheduler:
@@ -474,6 +484,43 @@ class MultitaskEngine:
                     per_request[i][t] = out[i]
         return per_request, stats
 
+    def prefetch_group(
+        self, group: RequestGroup, overlap_seconds: float = 0.0
+    ) -> float:
+        """Stage the next group's weight stream; returns the bytes scheduled.
+
+        The prefetch schedule comes for free from the cost model:
+        ``plan_loads`` over the group's execution order and the executor's
+        *current* residency is exactly the load set ``_execute_group`` will
+        account, so staging it makes the executor's ``prefetched_bytes``
+        equal that group's ``weight_bytes_loaded`` by construction.  JAX
+        dispatch is asynchronous, so the ``device_put`` transfers issued
+        here overlap with whatever previously dispatched group is still
+        executing on the device — ``overlap_seconds`` is that group's
+        modelled compute window, and whatever load time exceeds it is
+        staged alongside as the batch's modelled stall
+        (``GraphCostModel.prefetch_stall_seconds``).
+
+        Returns ``0.0`` without staging when the group needs no loads.
+        Raising (including an injected ``"prefetch"`` fault) leaves any
+        previously staged batch untouched; callers degrade to synchronous
+        loading.
+        """
+        self._inject("prefetch", group_tasks=group.tasks, valid=group.valid)
+        eff = self.group_order(group)
+        loads = self.cost_model.plan_loads(
+            eff, self.executor.residency_state()
+        )
+        if not loads:
+            return 0.0
+        stall = self.cost_model.prefetch_stall_seconds(
+            [d for d, _node in loads], overlap_seconds
+        )
+        self.executor.streamer.stage(loads, stall_seconds=stall)
+        return float(sum(
+            self.program.block_costs[d].weight_bytes for d, _node in loads
+        ))
+
     def _execute_group(self, group: RequestGroup) -> GroupExecution:
         """Run one planned group; the session's execution primitive.
 
@@ -509,9 +556,26 @@ class MultitaskEngine:
             warm_saved = (
                 cold_pred.weight_bytes_loaded - predicted.weight_bytes_loaded
             )
+        streamer = self.executor.streamer
+        staged = streamer.staged_nodes()
+        if staged:
+            # A prefetched group: the loads that will hit staged copies
+            # arrive over the stream, so predict them as prefetched plus
+            # the staged batch's modelled stall.  For an ungated engine the
+            # staged set *is* the load set (prefetch_group planned it from
+            # the same residency), making this exact by construction.
+            pf_bytes = sum(
+                self.program.block_costs[d].weight_bytes
+                for d, node in self.cost_model.plan_loads(eff, resume)
+                if node in staged
+            )
+            if pf_bytes > 0.0:
+                predicted.prefetched_bytes = pf_bytes
+                predicted.stream_stall_seconds = streamer.pending_stall_seconds
         predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
         self._inject("load", group_tasks=group.tasks, resume=resume)
         per_request, stats = self._run_group(group, eff)
+        stats.stream_stall_seconds += streamer.finish_group()
         return GroupExecution(
             group=group, eff=eff, outputs=per_request, stats=stats,
             predicted=predicted, warm_saved=warm_saved,

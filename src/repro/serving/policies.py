@@ -334,6 +334,15 @@ class EnginePolicy:
       sharding: logical->physical axis mapping used with ``mesh``
         (``TP_POLICY`` when unset; ``FSDP_TP_POLICY`` additionally shards
         weights over the data axis).
+      streaming: double-buffered asynchronous weight streaming: while each
+        group's fused suffix executes, the session prefetches the *next*
+        group's non-resident block params (``MultitaskEngine.prefetch_group``
+        -> ``WeightStreamer``), hiding load latency behind compute.  Prefetched
+        bytes drop out of the modelled synchronous load term and any
+        residue appears as ``ExecutionStats.stream_stall_seconds``; outputs
+        and byte counters are unchanged, and ``session.stats ==
+        session.predicted`` stays exact.  Requires ``warm_start`` (a cold
+        reset before every group would cancel every prefetch).
 
     The defaults reproduce the pre-session engine exactly: greedy one-shot
     admission, warm starts, cost-aware group ordering, global task order,
@@ -349,3 +358,4 @@ class EnginePolicy:
     scheduler: Optional[RequestGroupScheduler] = None
     mesh: Optional[Any] = None
     sharding: Optional[ShardingPolicy] = None
+    streaming: bool = False

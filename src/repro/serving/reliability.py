@@ -167,8 +167,11 @@ class RetryPolicy:
 #: * ``"load"`` — after the warm/cold residency boundary, immediately before
 #:   the group starts executing (the weight-load boundary);
 #: * ``"dispatch"`` — inside ``MultitaskEngine._run_group``, before each
-#:   task's batched dispatch.
-FAULT_SITES = ("plan", "load", "dispatch")
+#:   task's batched dispatch;
+#: * ``"prefetch"`` — entry of ``MultitaskEngine.prefetch_group``, before
+#:   the next group's weight stream is staged (streaming sessions only; a
+#:   fault here degrades that group to synchronous loads, never fails it).
+FAULT_SITES = ("plan", "load", "dispatch", "prefetch")
 
 
 class FaultInjector:

@@ -269,6 +269,15 @@ class ServingSession:
       sleep: backoff sleep hook (``time.sleep``); tests and simulated-clock
         benchmarks inject a no-op.  Never called when the policy's
         backoff base is 0.
+      streaming: double-buffered weight streaming (defaults to the engine's
+        ``EnginePolicy.streaming``).  Before each group executes, the pump
+        prefetches that group's non-resident block params
+        (``engine.prefetch_group``) behind the *previous* group's modelled
+        compute window — JAX dispatch is asynchronous, so the previous
+        group is still executing on the device while the transfers stream.
+        The first group of a session (and the group after any failure)
+        loads synchronously: there is no window to hide behind.  Requires
+        a warm-start engine.
     """
 
     def __init__(
@@ -281,6 +290,7 @@ class ServingSession:
         overload: str = "reject",
         retry: Optional[RetryPolicy] = None,
         sleep: Optional[Callable[[float], None]] = None,
+        streaming: Optional[bool] = None,
     ):
         if overload not in ("reject", "shed"):
             raise ValueError(
@@ -302,6 +312,18 @@ class ServingSession:
         self.overload = overload
         self.retry = retry if retry is not None else RetryPolicy()
         self._sleep = sleep if sleep is not None else time.sleep
+        self.streaming = (
+            engine.policy.streaming if streaming is None else bool(streaming)
+        )
+        if self.streaming and not engine.warm_start:
+            raise ValueError(
+                "streaming sessions require a warm-start engine: a cold "
+                "reset before every group cancels any staged prefetch"
+            )
+        # The overlap window the next prefetch may hide behind: the modelled
+        # compute seconds of the last successfully executed group (zero at
+        # session start and after any group failure — synchronous recovery).
+        self._stream_budget = 0.0
         self._seq = 0
         # ------------------------------------------------- running counters
         self.stats = ExecutionStats()       # executed, cumulative
@@ -320,6 +342,10 @@ class ServingSession:
         self.plan_failures = 0          # planning batches that failed whole
         self.backoff_seconds = 0.0      # total retry backoff slept
         self.plan_seconds = 0.0
+        self.prefetches_issued = 0      # groups whose loads were streamed
+        self.prefetch_scheduled_bytes = 0.0
+        self.prefetch_failures = 0      # prefetches that raised (degraded
+                                        # to synchronous loads, never fatal)
         self._group_seq = 0             # session-unique execution-group ids
         # Admission-latency tracking: running aggregates over every admitted
         # request (exact for the session's whole lifetime) plus a bounded
@@ -557,11 +583,24 @@ class ServingSession:
                 group_id = self._group_seq
                 self._group_seq += 1
                 members = tuple(admitted[slot] for slot in group.indices)
+                if self.streaming and self._stream_budget > 0.0:
+                    # Pipeline overlap: the previous group's dispatches are
+                    # still executing asynchronously on the device; stream
+                    # this group's non-resident weights behind them.
+                    self._prefetch(group)
                 execution, retries, degraded = self._run_group_guarded(
                     group, members, group_id)
                 if execution is None:
-                    continue  # ladder exhausted; members already failed
+                    # Ladder exhausted; members already failed.  No window
+                    # survives a failed group — the next prefetch would
+                    # overlap with compute that never completed.
+                    self._stream_budget = 0.0
+                    continue
                 self.groups_executed += 1
+                if self.streaming:
+                    self._stream_budget = execution.predicted.compute_seconds(
+                        self.engine.hw
+                    )
                 self.stats = self.stats.merge(execution.stats)
                 self.predicted = self.predicted.merge(execution.predicted)
                 # Resolve immediately: building responses is non-blocking
@@ -572,6 +611,30 @@ class ServingSession:
                 completed.extend(self._resolve(
                     execution, members, retries=retries, degraded=degraded))
         return completed
+
+    # ------------------------------------------------- weight streaming
+    def _prefetch(self, group) -> None:
+        """Stage ``group``'s weight stream behind the current overlap window.
+
+        Consumes the window either way (one compute window hides one
+        group's loads).  A prefetch failure — including an injected
+        ``"prefetch"`` fault — is never fatal: the streamer is cancelled
+        and the group simply loads synchronously, with counters exact for
+        the synchronous schedule it actually ran.
+        """
+        budget = self._stream_budget
+        self._stream_budget = 0.0
+        try:
+            scheduled = self.engine.prefetch_group(
+                group, overlap_seconds=budget
+            )
+        except Exception:
+            self.prefetch_failures += 1
+            self.engine.executor.streamer.cancel()
+            return
+        if scheduled > 0.0:
+            self.prefetches_issued += 1
+            self.prefetch_scheduled_bytes += scheduled
 
     # ------------------------------------------------- failure recovery
     def _run_group_guarded(

@@ -1,0 +1,499 @@
+"""Double-buffered weight streaming: the WeightStreamer, the cost model's
+prefetch schedule/stall terms, and the streaming serving pipeline.
+
+The contract under test: streaming changes *when* weight bytes move (behind
+the previous group's compute instead of on the group's critical path),
+never *what* gets computed or *how many* bytes move — outputs stay
+identical to synchronous serving, ``weight_bytes_loaded`` is unchanged, and
+``session.stats == session.predicted`` stays exact including the new
+``prefetched_bytes`` / ``stream_stall_seconds`` counters.  Cancellation
+(reset / rollback via ``set_residency``) must leave no half-committed
+residency or streamed state behind.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlockCost, GraphCostModel, MSP430, MultitaskProgram, TaskGraphExecutor,
+)
+from repro.core.task_graph import TaskGraph
+from repro.core.types import ExecutionStats
+from repro.serving import (
+    EnginePolicy, FaultInjector, MultitaskEngine, MultitaskRequest,
+    RequestGroupScheduler, RetryPolicy,
+)
+
+DIM = 8
+SUBSETS = ((0, 1), (3, 4), (0, 1, 2), (3, 4, 5), (0, 2), (4, 5))
+
+
+def _graph():
+    # Depth-4 split: tasks {0,1,2} and {3,4,5} share nothing past depth 0 —
+    # the prefix structure that makes loads group-boundary dependent.
+    return TaskGraph.from_groups([
+        [[0, 1, 2, 3, 4, 5]],
+        [[0, 1, 2], [3, 4, 5]],
+        [[0, 1], [2], [3, 4], [5]],
+        [[0], [1], [2], [3], [4], [5]],
+    ])
+
+
+def _program(graph, dim=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    costs = [BlockCost(weight_bytes=100.0 * (d + 1), flops=10.0 * (d + 1))
+             for d in range(graph.depth)]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)), jnp.float32)
+        for node in graph.nodes()
+    }
+    heads = [lambda p, x: x @ p] * graph.num_tasks
+    head_params = [
+        jnp.asarray(rng.normal(size=(dim, 3)), jnp.float32)
+        for _ in range(graph.num_tasks)
+    ]
+    return MultitaskProgram(
+        graph, [block] * graph.depth, node_params, heads, head_params, costs
+    )
+
+
+def _requests(rng, n, subsets=SUBSETS, dim=DIM):
+    return [
+        MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(dim,)), jnp.float32),
+            tasks=subsets[i % len(subsets)],
+        )
+        for i in range(n)
+    ]
+
+
+# --------------------------------------------------------------------------
+# Cost model: prefetch schedule + stall accounting
+# --------------------------------------------------------------------------
+
+def test_plan_loads_matches_predicted_load_bytes():
+    graph = _graph()
+    prog = _program(graph)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    rng = np.random.default_rng(1)
+    resident = (None,) * graph.depth
+    order = None
+    for _ in range(5):
+        # Subtree-contiguous orders (what cost-aware group ordering emits)
+        # never revisit an evicted block, so the schedule's bytes equal the
+        # prediction's loaded bytes exactly.
+        order = sorted(rng.permutation(graph.num_tasks)[
+            : int(rng.integers(1, 7))])
+        loads = cm.plan_loads(order, resident)
+        predicted = cm.predicted_stats(order, resume=resident)
+        assert sum(prog.block_costs[d].weight_bytes for d, _n in loads) == \
+            predicted.weight_bytes_loaded
+        # No duplicates: a block is staged at most once per plan.
+        assert len({node for _d, node in loads}) == len(loads)
+        resident = cm.residency_after(order, resident)
+    # A fully-resident replay loads nothing.
+    assert cm.plan_loads([order[-1]], resident) == []
+
+
+def test_plan_loads_dedupes_revisited_blocks():
+    """An interleaved order evicts and re-loads shared prefix blocks; the
+    prediction pays for both loads but the streamer stages one copy, so the
+    schedule lists the block once and the revisit loads synchronously."""
+    graph = _graph()
+    prog = _program(graph)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    order = [0, 3, 1]  # task 3 evicts {0,1,2}'s prefix; task 1 reloads it
+    loads = cm.plan_loads(order)
+    assert len({node for _d, node in loads}) == len(loads)
+    predicted = cm.predicted_stats(order)
+    scheduled = sum(prog.block_costs[d].weight_bytes for d, _n in loads)
+    assert scheduled < predicted.weight_bytes_loaded
+    # The gap is exactly the revisited prefix blocks (depths 1 and 2 of
+    # task 1's path, reloaded after task 3 evicted them).
+    revisit = sum(prog.block_costs[d].weight_bytes for d in (1, 2))
+    assert predicted.weight_bytes_loaded - scheduled == revisit
+    # Executed side agrees: one commit per staged node, revisits load
+    # synchronously, and the counters stay exact.
+    ex = TaskGraphExecutor(prog)
+    ex.streamer.stage(loads)
+    rng = np.random.default_rng(0)
+    _, stats = ex.run_batch(
+        jnp.asarray(rng.normal(size=(2, DIM)), jnp.float32), order)
+    assert stats.prefetched_bytes == scheduled
+    assert stats.weight_bytes_loaded == predicted.weight_bytes_loaded
+
+
+def test_plan_loads_rejects_bad_residency_length():
+    graph = _graph()
+    cm = GraphCostModel(graph, _program(graph).block_costs, MSP430)
+    with pytest.raises(ValueError, match="slots"):
+        cm.plan_loads([0], (None,) * (graph.depth + 1))
+
+
+def test_prefetch_stall_is_load_seconds_minus_overlap():
+    graph = _graph()
+    cm = GraphCostModel(graph, _program(graph).block_costs, MSP430)
+    depths = [0, 2, 3]
+    total = sum(cm.load_cost(d) for d in depths)
+    assert cm.prefetch_stall_seconds(depths, 0.0) == pytest.approx(total)
+    assert cm.prefetch_stall_seconds(depths, total / 2) == \
+        pytest.approx(total / 2)
+    # A window bigger than the loads hides them fully; negative windows
+    # clamp to no overlap.
+    assert cm.prefetch_stall_seconds(depths, 10 * total) == 0.0
+    assert cm.prefetch_stall_seconds(depths, -1.0) == pytest.approx(total)
+    assert cm.prefetch_stall_seconds([], 0.0) == 0.0
+
+
+def test_plan_predictor_overlap_marks_loads_prefetched():
+    graph = _graph()
+    prog = _program(graph)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    sync = cm.plan_predictor()
+    streamed = cm.plan_predictor()
+    orders = ([0, 1], [3, 4], [2, 0], [5])
+    for i, order in enumerate(orders):
+        loads = cm.plan_loads(order, streamed.residency)
+        d_sync = sync.append(order, batch_size=2)
+        # First group synchronous (no window yet), rest fully streamed.
+        overlap = None if i == 0 else 1e9
+        d_strm = streamed.append(order, batch_size=2, overlap_seconds=overlap)
+        assert d_strm.weight_bytes_loaded == d_sync.weight_bytes_loaded
+        if overlap is None:
+            assert d_strm.prefetched_bytes == 0.0
+        else:
+            assert d_strm.prefetched_bytes == d_strm.weight_bytes_loaded == \
+                sum(prog.block_costs[d].weight_bytes for d, _n in loads)
+            assert d_strm.stream_stall_seconds == 0.0
+    # Totals: identical bytes, every post-first load prefetched.
+    assert streamed.stats.weight_bytes_loaded == sync.stats.weight_bytes_loaded
+    first = cm.predicted_stats(orders[0], batch_size=2)
+    assert streamed.stats.prefetched_bytes == \
+        streamed.stats.weight_bytes_loaded - first.weight_bytes_loaded
+    # A tight window leaves the residual as stall.
+    tight = cm.plan_predictor()
+    tight.append(orders[0], batch_size=2)
+    loads = cm.plan_loads(orders[1], tight.residency)
+    load_s = sum(cm.load_cost(d) for d, _n in loads)
+    delta = tight.append(orders[1], batch_size=2, overlap_seconds=load_s / 4)
+    assert delta.stream_stall_seconds == pytest.approx(0.75 * load_s)
+
+
+def test_stats_seconds_subtracts_prefetched_and_adds_stall():
+    hw = MSP430
+    base = ExecutionStats(flops_executed=1e6, weight_bytes_loaded=8e5)
+    streamed = ExecutionStats(
+        flops_executed=1e6, weight_bytes_loaded=8e5,
+        prefetched_bytes=6e5, stream_stall_seconds=0.01,
+    )
+    assert streamed.compute_seconds(hw) == pytest.approx(
+        hw.exec_seconds(1e6))
+    assert streamed.seconds(hw) == pytest.approx(
+        hw.exec_seconds(1e6) + hw.load_seconds(2e5) + 0.01)
+    assert streamed.seconds(hw) < base.seconds(hw)
+    # merge carries the streaming fields.
+    merged = base.merge(streamed)
+    assert merged.prefetched_bytes == 6e5
+    assert merged.stream_stall_seconds == pytest.approx(0.01)
+
+
+# --------------------------------------------------------------------------
+# WeightStreamer: staging slots, commit-on-use, cancellation
+# --------------------------------------------------------------------------
+
+def test_streamer_commit_on_use_cycle():
+    graph = _graph()
+    prog = _program(graph)
+    ex = TaskGraphExecutor(prog)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    loads = cm.plan_loads([0, 1], ex.residency_state())
+    st = ex.streamer
+    st.stage(loads, stall_seconds=0.25)
+    assert st.staged_nodes() == {node for _d, node in loads}
+    assert st.pending_stall_seconds == 0.25
+    d0, n0 = loads[0]
+    assert st.commit(n0) is True
+    assert st.commit(n0) is False          # single staged copy per node
+    assert st.commit((0, (9,))) is False   # never-staged node
+    assert n0 not in st.staged_nodes()
+    # Stall charged exactly once, because something committed.
+    assert st.finish_group() == 0.25
+    assert st.finish_group() == 0.0
+    assert st.staged_nodes() == frozenset()
+
+
+def test_streamer_unconsumed_batch_charges_no_stall():
+    graph = _graph()
+    prog = _program(graph)
+    ex = TaskGraphExecutor(prog)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    ex.streamer.stage(cm.plan_loads([3], ex.residency_state()), 0.5)
+    # Nothing committed (e.g. every staged task gated off): no stall.
+    assert ex.streamer.finish_group() == 0.0
+
+
+def test_streamer_restage_replaces_previous_batch():
+    graph = _graph()
+    prog = _program(graph)
+    ex = TaskGraphExecutor(prog)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    first = cm.plan_loads([0], ex.residency_state())
+    second = cm.plan_loads([5], ex.residency_state())
+    st = ex.streamer
+    st.stage(first, 0.1)
+    st.stage(second, 0.2)   # double buffer: one staging batch at a time
+    assert st.staged_nodes() == {node for _d, node in second}
+    assert st.pending_stall_seconds == 0.2
+    assert st.cancels == 1  # replacing an unconsumed batch is a cancel
+
+
+def test_executor_prefetch_counts_bytes_and_keeps_outputs():
+    graph = _graph()
+    prog = _program(graph)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    rng = np.random.default_rng(7)
+    xs = jnp.asarray(rng.normal(size=(3, DIM)), jnp.float32)
+    order = [0, 1, 2]
+
+    ref = TaskGraphExecutor(prog)
+    ref_out, ref_stats = ref.run_batch(xs, order)
+
+    ex = TaskGraphExecutor(prog)
+    loads = cm.plan_loads(order, ex.residency_state())
+    ex.streamer.stage(loads, stall_seconds=0.125)
+    out, stats = ex.run_batch(xs, order)
+    for t in ref_out:
+        np.testing.assert_allclose(
+            np.asarray(out[t]), np.asarray(ref_out[t]), rtol=1e-6)
+    assert stats.prefetched_bytes == stats.weight_bytes_loaded == \
+        ref_stats.weight_bytes_loaded
+    # The executor's own run_batch does not close the batch (that is the
+    # engine's per-group hook); closing it here yields the staged stall.
+    assert ex.streamer.finish_group() == 0.125
+    # Committed single-device copies actually back the parameter lookups.
+    assert ex._streamed_node and all(
+        node in ex._streamed_node for _d, node in loads)
+
+
+# --------------------------------------------------------------------------
+# Residency edge cases: mismatched depth, restore-then-prefetch, rollback
+# --------------------------------------------------------------------------
+
+def test_set_residency_rejects_mismatched_depth():
+    graph = _graph()
+    ex = TaskGraphExecutor(_program(graph))
+    for bad in ((None,) * (graph.depth - 1), (None,) * (graph.depth + 1), ()):
+        with pytest.raises(ValueError, match="slots"):
+            ex.set_residency(bad)
+    # A rejected restore leaves the executor usable and its state intact.
+    before = ex.residency_state()
+    assert ex.residency_state() == before
+
+
+def test_restore_cancels_inflight_prefetch():
+    graph = _graph()
+    prog = _program(graph)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    ex = TaskGraphExecutor(prog)
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.normal(size=(2, DIM)), jnp.float32)
+    _, _ = ex.run_batch(xs, [0, 1])
+    snapshot = ex.residency_state()
+    ex.streamer.stage(cm.plan_loads([3, 4], snapshot), stall_seconds=0.5)
+    # Restore-then-prefetch cancellation: the rollback boundary drops the
+    # staged batch and its pending stall.
+    ex.set_residency(snapshot)
+    assert ex.streamer.staged_nodes() == frozenset()
+    assert ex.streamer.pending_stall_seconds == 0.0
+    assert ex.streamer.cancels == 1
+    # The next group loads synchronously and stays counter-exact.
+    resume = ex.residency_state()
+    _out, stats = ex.run_batch(xs, [3, 4])
+    predicted = cm.predicted_stats([3, 4], batch_size=2, resume=resume)
+    assert stats == predicted
+    assert stats.prefetched_bytes == 0.0 and stats.stream_stall_seconds == 0.0
+
+
+def test_reset_drops_streamed_state():
+    graph = _graph()
+    prog = _program(graph)
+    cm = GraphCostModel(graph, prog.block_costs, MSP430)
+    ex = TaskGraphExecutor(prog)
+    loads = cm.plan_loads([0], ex.residency_state())
+    ex.streamer.stage(loads, 0.1)
+    rng = np.random.default_rng(5)
+    ex.run_batch(jnp.asarray(rng.normal(size=(1, DIM)), jnp.float32), [0])
+    assert ex._streamed_node  # committed copies in use
+    ex.reset()
+    assert ex.streamer.staged_nodes() == frozenset()
+    assert ex._streamed_node == {}
+    assert ex.streamer.pending_stall_seconds == 0.0
+
+
+def test_rollback_mid_prefetch_leaves_no_half_committed_residency():
+    """A group that crashes after committing part of its prefetched stream
+    must roll back to the snapshot with nothing streamed left behind, and
+    the session's counters must stay exact through the recovery."""
+    graph = _graph()
+    prog = _program(graph)
+    rng = np.random.default_rng(11)
+    # Second dispatch of the trace fails: by then the first group has
+    # executed (building a stream budget), so the failing group is mid-way
+    # through consuming its own prefetched weights.
+    injector = FaultInjector(script={"dispatch": (2,)})
+    eng = MultitaskEngine(
+        prog, hw=MSP430, policy=EnginePolicy(streaming=True),
+        scheduler=RequestGroupScheduler(batch_shapes=(1, 2)),
+        fault_injector=injector,
+    )
+    session = eng.session(retry=RetryPolicy(max_retries=2, degrade=True))
+    futures = [session.submit(r) for r in _requests(rng, 8)]
+    session.drain()
+    assert injector.total_injected == 1
+    assert all(f.done() for f in futures)
+    assert all(f.error() is None for f in futures)
+    assert session.stats == session.predicted
+    assert session.group_retries >= 1
+    # Post-drain: no staged leftovers, no dangling stall.
+    st = eng.executor.streamer
+    assert st.staged_nodes() == frozenset()
+    assert st.pending_stall_seconds == 0.0
+    assert st.cancels >= 1  # the rollback cancelled the in-flight stream
+    # Outputs equal solo serving despite the mid-prefetch crash.
+    solo = MultitaskEngine(prog, hw=MSP430, warm_start=False,
+                           group_ordering=False,
+                           scheduler=RequestGroupScheduler(batch_shapes=(1,)))
+    for f, req in zip(futures, _requests(np.random.default_rng(11), 8)):
+        ref = solo.serve(MultitaskRequest(x=req.x, tasks=req.tasks))
+        resp = f.result()
+        for t in ref.outputs:
+            np.testing.assert_allclose(np.asarray(resp.outputs[t]),
+                                       np.asarray(ref.outputs[t]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Serving pipeline: streamed sessions vs synchronous sessions
+# --------------------------------------------------------------------------
+
+def _run_session(prog, reqs, streaming, **kwargs):
+    eng = MultitaskEngine(
+        prog, hw=MSP430, policy=EnginePolicy(streaming=streaming),
+        scheduler=RequestGroupScheduler(batch_shapes=(1, 2, 4)),
+        **kwargs,
+    )
+    session = eng.session()
+    futures = [session.submit(r) for r in reqs]
+    session.drain()
+    return eng, session, [f.result() for f in futures]
+
+
+def test_streaming_session_matches_synchronous():
+    graph = _graph()
+    prog = _program(graph)
+    rng = np.random.default_rng(2)
+    reqs = _requests(rng, 12)
+    _, sync, sync_resp = _run_session(prog, reqs, streaming=False)
+    _, strm, strm_resp = _run_session(prog, reqs, streaming=True)
+    for a, b in zip(sync_resp, strm_resp):
+        assert set(a.outputs) == set(b.outputs)
+        for t in a.outputs:
+            np.testing.assert_allclose(np.asarray(b.outputs[t]),
+                                       np.asarray(a.outputs[t]), rtol=1e-6)
+    # Exact on both sides, including the streaming counters.
+    assert sync.stats == sync.predicted
+    assert strm.stats == strm.predicted
+    # Same bytes move; a strict subset of them move synchronously.
+    assert strm.stats.weight_bytes_loaded == sync.stats.weight_bytes_loaded
+    assert strm.stats.prefetched_bytes > 0.0
+    assert sync.stats.prefetched_bytes == 0.0
+    assert strm.prefetches_issued > 0
+    assert strm.prefetch_scheduled_bytes == strm.stats.prefetched_bytes
+    # Streaming can only help the modelled wall-clock.
+    assert strm.stats.seconds(MSP430) <= sync.stats.seconds(MSP430)
+
+
+def test_streaming_requires_warm_start():
+    graph = _graph()
+    prog = _program(graph)
+    with pytest.raises(ValueError, match="warm_start"):
+        MultitaskEngine(
+            prog, hw=MSP430,
+            policy=EnginePolicy(streaming=True, warm_start=False),
+        )
+    cold = MultitaskEngine(prog, hw=MSP430, warm_start=False)
+    with pytest.raises(ValueError, match="warm-start"):
+        cold.session(streaming=True)
+
+
+def test_session_streaming_kwarg_overrides_policy():
+    graph = _graph()
+    prog = _program(graph)
+    rng = np.random.default_rng(4)
+    reqs = _requests(rng, 8)
+    eng = MultitaskEngine(
+        prog, hw=MSP430, policy=EnginePolicy(streaming=True),
+        scheduler=RequestGroupScheduler(batch_shapes=(1, 2, 4)),
+    )
+    session = eng.session(streaming=False)  # opt out per session
+    for r in reqs:
+        session.submit(r)
+    session.drain()
+    assert session.stats == session.predicted
+    assert session.stats.prefetched_bytes == 0.0
+    assert session.prefetches_issued == 0
+
+
+def test_prefetch_fault_degrades_to_synchronous_loads():
+    graph = _graph()
+    prog = _program(graph)
+    rng = np.random.default_rng(6)
+    reqs = _requests(rng, 12)
+    injector = FaultInjector(script={"prefetch": (0, 1)})
+    eng, session, responses = _run_session(
+        prog, reqs, streaming=True, fault_injector=injector)
+    assert injector.injected["prefetch"] == 2
+    assert session.prefetch_failures == 2
+    # Faulted prefetches degrade those groups to synchronous loads — the
+    # session never fails a request over a prefetch.
+    assert all(r is not None for r in responses)
+    assert session.requests_failed == 0
+    assert session.stats == session.predicted
+    # Later groups still streamed.
+    assert session.prefetches_issued > 0
+    assert session.stats.prefetched_bytes > 0.0
+
+
+def test_streaming_with_gates_stays_self_consistent():
+    """Gated engines cannot be prediction-exact (gates are input-dependent),
+    but a gated streamed run must still count only committed bytes and
+    match the synchronous gated run's outputs."""
+    graph = _graph()
+    prog = _program(graph)
+    rng = np.random.default_rng(9)
+    reqs = _requests(rng, 10)
+    gates = {1: lambda outs: bool(np.asarray(outs[0])[0] > 0) if 0 in outs
+             else True}
+    syncs = []
+    for streaming in (False, True):
+        eng = MultitaskEngine(
+            prog, hw=MSP430, gates=gates,
+            policy=EnginePolicy(streaming=streaming),
+            scheduler=RequestGroupScheduler(batch_shapes=(1, 2)),
+        )
+        session = eng.session()
+        futs = [session.submit(r) for r in reqs]
+        session.drain()
+        syncs.append((session, [f.result() for f in futs]))
+    (s0, r0), (s1, r1) = syncs
+    for a, b in zip(r0, r1):
+        assert set(a.outputs) == set(b.outputs)
+        for t in a.outputs:
+            np.testing.assert_allclose(np.asarray(b.outputs[t]),
+                                       np.asarray(a.outputs[t]), rtol=1e-6)
+    assert s1.stats.weight_bytes_loaded == s0.stats.weight_bytes_loaded
+    assert s1.stats.prefetched_bytes <= s1.stats.weight_bytes_loaded
