@@ -1,0 +1,428 @@
+"""Intermittent-power serving benchmark: journaled checkpoint/resume on the
+MSP430 hardware model vs restart-from-scratch, plus energy-budgeted
+duty-cycled execution.
+
+The paper's deployment target (TI MSP430FR5994) runs batteryless: power
+fails mid-inference, SRAM state evaporates, and only FRAM survives.  This
+benchmark drives the serving stack's intermittent machinery end to end on
+that hardware model (``get_hardware("msp430fr5994")``):
+
+* a :class:`MemoryJournalStore` held *outside* the session plays the FRAM —
+  it survives every simulated power failure while the session and the
+  executor (SRAM) are rebuilt from scratch;
+* a single seeded :class:`PowerFailureInjector` (also outside the session,
+  like real weather) kills the whole process ~:data:`N_FAILURES` times at
+  group and mid-suffix boundaries across the trace;
+* every reboot calls :meth:`ServingSession.recover` over the journal, which
+  resolves committed groups, resumes the interrupted group from its deepest
+  durable activation checkpoint, and re-enqueues the backlog.
+
+Three interrupted arms share the identical trace:
+
+* **resume** — cost-placed mid-suffix checkpoints on; a reboot resumes the
+  interrupted suffix from the checkpoint depth;
+* **restart** — ``recover(..., use_checkpoints=False)``: the journal still
+  guarantees exactly-once responses, but every reboot re-runs the
+  interrupted group from depth 0 (the classic restart-from-scratch
+  baseline);
+* **energy** — failure-free but duty-cycled: an :class:`EnergyBudget`
+  (storage capacitor + constant harvest rate) gates every group, pausing
+  the pump until enough charge accrues.
+
+Re-executed compute joules are accounted exactly: each arm's total spent
+compute energy is the sum of its *committed* counters across boots plus the
+partial counters each :class:`PowerFailure` carries out of the dying
+process (``pf.context["stats"]``, the about-to-be-lost work); re-executed =
+total spent - the uninterrupted baseline's compute energy.
+
+Gates (dry-run included; any failure exits 1):
+
+* **zero lost responses** — after the final drain every journaled admit has
+  a committed response;
+* **exactly-once** — no group commits twice, no request is covered by two
+  commits, and duplicate replay of the full journal is idempotent;
+* **output equivalence** — every response in every arm is allclose to the
+  uninterrupted baseline's;
+* **counter exactness** — ``session.stats == session.predicted`` holds for
+  every boot of every arm, checkpoint terms included;
+* **failures really happened** — >= :data:`MIN_FAILURES` injected power
+  failures per interrupted arm (target ~:data:`N_FAILURES`);
+* **checkpointing pays** — the restart arm re-executes >=
+  :data:`REEXEC_GATE` x the resume arm's compute joules;
+* **duty cycle works** — the energy arm pauses at least once and still
+  serves everything.
+
+Machine-readable results land in the ``intermittent_sweep`` section of
+``BENCH_serving.json``.
+
+Usage: ``PYTHONPATH=src python benchmarks/serving_intermittent.py [--dry-run]``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serving_intermittent.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.common import emit, update_bench_json
+from benchmarks.serving_groups import SUBSETS
+from repro.configs import get_hardware
+from repro.core import BlockCost, MultitaskProgram
+from repro.core.task_graph import TaskGraph
+from repro.core.types import ExecutionStats
+from repro.serving import (
+    EnergyBudget, EnginePolicy, Journal, MemoryJournalStore, MultitaskEngine,
+    MultitaskRequest, PowerFailure, PowerFailureInjector,
+    RequestGroupScheduler, ServingSession,
+)
+
+N_FAILURES = 20      # power-failure cap per interrupted arm
+MIN_FAILURES = 12    # gate: the schedule must actually exercise recovery
+REEXEC_GATE = 1.5    # restart arm re-executes >= this x resume arm's joules
+FAIL_RATES = {"group": 0.45, "suffix": 0.3}
+
+HW = get_hardware("msp430fr5994")
+
+# Deep graph with a long shared trunk — the paper's multitask networks
+# share their early feature layers, which is what makes trunk checkpoints
+# valuable: a durable activation on the trunk seeds the resume of *every*
+# task in the group, while a post-branch checkpoint helps only its own task.
+GRAPH = TaskGraph.from_groups([
+    [[0, 1, 2, 3, 4, 5]],
+    [[0, 1, 2, 3, 4, 5]],
+    [[0, 1, 2, 3, 4, 5]],
+    [[0, 1, 2], [3, 4, 5]],
+    [[0, 1], [2], [3], [4, 5]],
+    [[0], [1], [2], [3], [4], [5]],
+])
+
+
+def build_program(dim: int, seed: int = 0) -> MultitaskProgram:
+    """Dense tanh blocks + linear heads with *nonzero activation bytes*.
+
+    ``act_bytes`` (one float32 activation row per request) is what gives a
+    durable checkpoint its write cost — with it at 0 the placement rule
+    would checkpoint everywhere and the resume-vs-restart comparison would
+    be vacuous.
+    """
+    rng = np.random.default_rng(seed)
+    costs = [
+        BlockCost(weight_bytes=4.0 * dim * dim, flops=2.0 * dim * dim,
+                  act_bytes=4.0 * dim)
+        for _ in range(GRAPH.depth)
+    ]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)) / np.sqrt(dim),
+                          jnp.float32)
+        for node in GRAPH.nodes()
+    }
+    head_params = [
+        jnp.asarray(rng.normal(size=(dim, 8)), jnp.float32)
+        for _ in range(GRAPH.num_tasks)
+    ]
+    return MultitaskProgram(
+        graph=GRAPH,
+        block_fns=[block] * GRAPH.depth,
+        node_params=node_params,
+        head_fns=[lambda p, x: x @ p] * GRAPH.num_tasks,
+        head_params=head_params,
+        block_costs=costs,
+    )
+
+
+def build_requests(n_requests: int, dim: int, seed: int = 2):
+    rng = np.random.default_rng(seed)
+    return [
+        MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(dim,)), jnp.float32),
+            tasks=SUBSETS[i % len(SUBSETS)],
+        )
+        for i in range(n_requests)
+    ]
+
+
+def make_engine(prog, shapes):
+    return MultitaskEngine(
+        prog, hw=HW, policy=EnginePolicy(warm_start=True),
+        scheduler=RequestGroupScheduler(batch_shapes=shapes),
+    )
+
+
+def run_interrupted(prog, reqs, shapes, use_checkpoints, seed):
+    """One interrupted arm: serve the trace through ~N_FAILURES reboots.
+
+    Returns the surviving journal store plus the arm's exact energy
+    accounting: committed counters summed over every boot, and the partial
+    counters each PowerFailure carried out of its dying process.
+    """
+    engine = make_engine(prog, shapes)
+    injector = PowerFailureInjector(
+        rates=FAIL_RATES, seed=seed, max_failures=N_FAILURES,
+    )
+    engine.power_injector = injector
+    store = MemoryJournalStore()
+    session = ServingSession(
+        engine, journal=Journal(store), checkpointing=use_checkpoints,
+    )
+    for r in reqs:
+        session.submit(r)
+
+    committed = ExecutionStats()
+    lost = ExecutionStats()
+    reboots = 0
+    exact = True
+
+    def bank_lost(pf):
+        """The dying process's partial counters ride out on the exception —
+        the work they describe is about to evaporate with SRAM, and it is
+        exactly the re-execution this benchmark measures.
+
+        The executor charges a task's whole suffix to ``stats`` before
+        dispatching it, so a mid-suffix death has over-counted the current
+        task by its not-yet-executed tail — subtract it, using the depth
+        and batch weight the failure context carries."""
+        nonlocal lost
+        part = pf.context.get("stats")
+        if part is None:
+            return
+        part = dataclasses.replace(part)
+        if pf.site == "suffix":
+            w = float(pf.context.get("weight", 1))
+            tail = prog.block_costs[int(pf.context["depth"]) + 1:]
+            part.flops_executed -= w * sum(bc.flops for bc in tail)
+        lost = lost.merge(part)
+
+    while True:
+        try:
+            session.drain()
+            break
+        except PowerFailure as pf:
+            reboots += 1
+            bank_lost(pf)
+            exact = exact and session.stats == session.predicted
+            committed = committed.merge(session.stats)
+            while True:
+                engine.executor.reset()  # SRAM gone
+                try:
+                    session = ServingSession.recover(
+                        Journal(store), engine,
+                        use_checkpoints=use_checkpoints,
+                    )
+                    break
+                except PowerFailure as pf2:
+                    reboots += 1
+                    bank_lost(pf2)
+    exact = exact and session.stats == session.predicted
+    committed = committed.merge(session.stats)
+    return {
+        "store": store,
+        "committed": committed,
+        "lost": lost,
+        "reboots": reboots,
+        "failures": injector.total_injected,
+        "exact": exact,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes (failure schedules are deterministic "
+                         "either way)")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="block width (default 128, dry-run 16)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default 48, dry-run 24)")
+    ap.add_argument("--fail-seed", type=int, default=17,
+                    help="PowerFailureInjector seed (the failure schedule "
+                         "is a pure function of it)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable results file ('' disables)")
+    args = ap.parse_args(argv)
+
+    dim = args.dim or (16 if args.dry_run else 128)
+    n_req = args.requests or (24 if args.dry_run else 48)
+    shapes = (1, 2, 4)
+
+    prog = build_program(dim)
+    reqs = build_requests(n_req, dim)
+
+    failures: list = []
+
+    def check(ok, msg):
+        if not ok:
+            failures.append(msg)
+            print(f"FAIL: {msg}", file=sys.stderr)
+
+    # ---------------------------------------------------------- baseline
+    # Uninterrupted journaled run: the output + compute-energy reference.
+    base_engine = make_engine(prog, shapes)
+    base_store = MemoryJournalStore()
+    base = ServingSession(base_engine, journal=Journal(base_store))
+    base_futs = [base.submit(r) for r in reqs]
+    base.drain()
+    check(base.stats == base.predicted,
+          "baseline: executed counters diverge from prediction")
+    check(base.stats.checkpoint_bytes > 0,
+          "baseline: cost model placed no checkpoints (vacuous benchmark)")
+    base_outputs = {f.seq: f.result().outputs for f in base_futs}
+    base_compute = base.stats.compute_energy(HW)
+
+    def check_journal(name, store, arm=None):
+        """The correctness gates every interrupted arm must pass."""
+        state = Journal(store).replay()
+        # Zero lost: every durable admit has a durable response.
+        missing = sorted(set(state.admitted) - set(state.responses))
+        check(not missing, f"{name}: requests lost {missing}")
+        check(len(state.admitted) == n_req,
+              f"{name}: {len(state.admitted)} admits != {n_req} requests")
+        # Exactly-once: one commit per group, one covering commit per seq.
+        commits = [r for r in store.records() if r["kind"] == "group_commit"]
+        gids = [r["group_id"] for r in commits]
+        check(len(gids) == len(set(gids)),
+              f"{name}: a group committed more than once")
+        seq_commits: dict = {}
+        for r in commits:
+            for s in r["seqs"]:
+                seq_commits[s] = seq_commits.get(s, 0) + 1
+        dup = sorted(s for s, k in seq_commits.items() if k > 1)
+        check(not dup, f"{name}: requests {dup} covered by multiple commits")
+        # Idempotent replay: folding the log twice changes nothing.
+        again = Journal(store).replay()
+        check(set(again.responses) == set(state.responses),
+              f"{name}: replay is not idempotent")
+        # Output equivalence vs the uninterrupted baseline, per request.
+        for seq, ref in base_outputs.items():
+            rec = state.responses.get(seq)
+            if rec is None:
+                continue  # already reported as lost
+            got = rec["outputs"]
+            check(set(got) == set(ref), f"{name}: seq {seq} task set differs")
+            for t in ref:
+                if not np.allclose(np.asarray(got[t]), np.asarray(ref[t]),
+                                   rtol=1e-5, atol=1e-6):
+                    check(False, f"{name}: seq {seq} task {t} outputs "
+                                 f"diverge from the uninterrupted run")
+        return state
+
+    # ------------------------------------------------- interrupted arms
+    runs = {}
+    for name, use_ck in (("resume", True), ("restart", False)):
+        arm = run_interrupted(prog, reqs, shapes, use_ck, args.fail_seed)
+        check_journal(name, arm["store"])
+        check(arm["exact"],
+              f"{name}: a boot's counters diverged from its prediction")
+        check(arm["failures"] >= MIN_FAILURES,
+              f"{name}: only {arm['failures']} power failures injected "
+              f"(< {MIN_FAILURES}; schedule too gentle to gate on)")
+        spent = (arm["committed"].compute_energy(HW)
+                 + arm["lost"].compute_energy(HW))
+        runs[name] = {
+            "reboots": arm["reboots"],
+            "power_failures": arm["failures"],
+            "committed_compute_joules": arm["committed"].compute_energy(HW),
+            "lost_compute_joules": arm["lost"].compute_energy(HW),
+            "spent_compute_joules": spent,
+            "reexecuted_compute_joules": spent - base_compute,
+            "checkpoint_bytes_written": arm["committed"].checkpoint_bytes,
+            "checkpoint_seconds": arm["committed"].checkpoint_seconds,
+            "journal_records": len(arm["store"].records()),
+            "counters_exact": arm["exact"],
+        }
+        emit(f"serve_intermittent_{name}", spent * 1e6,
+             f"spent_compute_ujoules;failures={arm['failures']};"
+             f"reboots={arm['reboots']};"
+             f"reexec_uJ={(spent - base_compute) * 1e6:.1f}")
+    check(runs["resume"]["checkpoint_bytes_written"] > 0,
+          "resume arm wrote no checkpoints")
+    check(runs["restart"]["checkpoint_bytes_written"] == 0,
+          "restart arm wrote checkpoints (should be disabled)")
+
+    # Gate: checkpoints pay — restart re-executes >= REEXEC_GATE x more.
+    re_resume = runs["resume"]["reexecuted_compute_joules"]
+    re_restart = runs["restart"]["reexecuted_compute_joules"]
+    check(re_resume > 0 and re_restart > 0,
+          f"re-executed joules must be positive "
+          f"(resume {re_resume:.3e}, restart {re_restart:.3e})")
+    ratio = re_restart / re_resume if re_resume > 0 else float("inf")
+    runs["restart_vs_resume_reexec_ratio"] = ratio
+    check(ratio >= REEXEC_GATE,
+          f"restart re-executes only {ratio:.2f}x the resume arm's compute "
+          f"joules (< {REEXEC_GATE}x): checkpoints did not pay")
+
+    # ------------------------------------------------- energy-budget arm
+    # Duty-cycled failure-free serving: a storage capacitor sized to the
+    # whole trace's energy, charged from empty by a constant harvest rate.
+    # Every group waits for charge, so the pump pauses >= once per group.
+    eng_e = make_engine(prog, shapes)
+    store_e = MemoryJournalStore()
+    budget = EnergyBudget(
+        capacity_joules=base.stats.energy(HW) * 1.5,
+        harvest_watts=base.stats.energy(HW),   # ~1 simulated second to fill
+        initial_joules=0.0,
+    )
+    energy_session = ServingSession(
+        eng_e, journal=Journal(store_e), energy=budget,
+        sleep=lambda s: None,  # simulated time: pauses are accounted, not slept
+    )
+    efuts = [energy_session.submit(r) for r in reqs]
+    energy_session.drain()
+    check_journal("energy", store_e)
+    check(energy_session.stats == energy_session.predicted,
+          "energy: executed counters diverge from prediction")
+    check(all(f.done() and f.error() is None for f in efuts),
+          "energy: not every request served")
+    check(energy_session.energy_pauses > 0, "energy: the pump never paused")
+    check(energy_session.groups_failed == 0,
+          "energy: groups failed under the budget")
+    runs["energy"] = {
+        "pauses": energy_session.energy_pauses,
+        "paused_seconds": energy_session.energy_paused_seconds,
+        "harvested_joules": budget.harvested_joules,
+        "spilled_joules": budget.spilled_joules,
+        "capacity_joules": budget.capacity_joules,
+        "harvest_watts": budget.harvest_watts,
+        "groups_executed": energy_session.groups_executed,
+    }
+    emit("serve_intermittent_energy",
+         energy_session.energy_paused_seconds * 1e6,
+         f"paused_useconds;pauses={energy_session.energy_pauses};"
+         f"groups={energy_session.groups_executed}")
+
+    if args.json:
+        update_bench_json(args.json, "intermittent_sweep", {
+            "dim": dim, "requests": n_req, "dry_run": bool(args.dry_run),
+            "batch_shapes": list(shapes), "hardware": "msp430fr5994",
+            "fail_rates": FAIL_RATES, "fail_seed": args.fail_seed,
+            "n_failures_cap": N_FAILURES, "min_failures_gate": MIN_FAILURES,
+            "reexec_gate": REEXEC_GATE,
+            "baseline_compute_joules": base_compute,
+            "baseline_total_joules": base.stats.energy(HW),
+            "baseline_checkpoint_bytes": base.stats.checkpoint_bytes,
+            "runs": runs,
+        })
+    if failures:
+        return 1
+    print(f"# intermittent: restart re-executed {ratio:.2f}x the resume "
+          f"arm's compute joules (>= {REEXEC_GATE}x) across "
+          f"{runs['resume']['power_failures']}+"
+          f"{runs['restart']['power_failures']} power failures")
+    print(f"# energy: {runs['energy']['pauses']} duty-cycle pauses, "
+          f"{runs['energy']['paused_seconds']:.3f}s simulated charging, "
+          f"all {n_req} requests served")
+    print("# zero lost/duplicated responses; outputs + exact counters "
+          "verified in every boot of every arm")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,3 +27,8 @@ python benchmarks/serving_chaos.py --dry-run
 # counters including prefetched_bytes / stream_stall_seconds, the <= 0.5x
 # stall-vs-sync-load gate, and the >= 1.2x modelled-speedup gate.
 python benchmarks/serving_streaming.py --dry-run
+# Intermittent-power sweep: ~20 injected power failures with zero lost or
+# duplicated responses, recovered-vs-uninterrupted output equivalence, exact
+# counters including checkpoint_bytes / checkpoint_seconds, and the >= 1.5x
+# re-executed-compute-joules gate for checkpointed resume vs restart.
+python benchmarks/serving_intermittent.py --dry-run

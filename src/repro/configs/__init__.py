@@ -54,3 +54,10 @@ def get_smoke_config(arch_id: str) -> ModelConfig:
 
 def all_configs() -> Dict[str, ModelConfig]:
     return {a: get_config(a) for a in list_archs()}
+
+
+# Named hardware presets (the paper's MCU boards + the TPU default); see
+# repro.configs.hardware for the documented constants.
+from repro.configs.hardware import (  # noqa: E402
+    HARDWARE, get_hardware, list_hardware,
+)

@@ -166,13 +166,27 @@ class GraphCostModel:
         resident: List[Optional[NodeId]],
         stats: ExecutionStats,
         collectives: Optional["CollectiveCosts"] = None,
+        first_task_resume: int = 0,
     ) -> None:
         """One group's counter prediction, mutating ``resident``/``stats``.
 
         Mirrors ``TaskGraphExecutor._run_task_impl`` exactly: the first task
         of a group never resumes from activations (the executor clears them
         at every input/group boundary), but any block still resident in
-        ``resident`` skips its load while still executing.
+        ``resident`` skips its load while still executing.  The one
+        exception is crash recovery: ``first_task_resume`` is the resume
+        depth of the order's *first* task when a journaled mid-suffix
+        activation checkpoint was restored into the executor
+        (``TaskGraphExecutor.restore_activation``) — blocks below it skip
+        both load and execute, exactly as a shared prefix would.
+
+        A restored checkpoint also punches a hole in the activation cache:
+        depths *below* the checkpoint were never computed this boot, so a
+        later task whose shared prefix with its predecessor ends below that
+        floor finds no cached activation at all and resumes from 0 (the
+        executor's deepest-match rule).  ``act_floor`` tracks the
+        shallowest cached depth — ``first_task_resume - 1`` after a
+        restore, and 0 again as soon as any task re-executes from the root.
 
         ``collectives`` (``TaskGraphExecutor.collective_view``) adds the
         mesh-sharded collective bytes of each task's fused-suffix dispatch:
@@ -182,14 +196,29 @@ class GraphCostModel:
         executor will report — exact by construction.
         """
         prev: Optional[int] = None
+        act_floor = max(int(first_task_resume) - 1, 0)
         for t in order:
             path = self.graph.path(t)
-            shared = (
-                self.graph.shared_prefix_depth(prev, t) if prev is not None else 0
-            )
+            if prev is None:
+                shared = int(first_task_resume)
+            else:
+                shared = self.graph.shared_prefix_depth(prev, t)
+                if 0 < shared <= act_floor:
+                    # The shared activation this resume needs sits below
+                    # the restored checkpoint's floor — it never existed
+                    # this boot, so the executor starts the task from 0.
+                    shared = 0
+            act_floor = min(act_floor, shared)
             for d in range(self.graph.depth):
                 bc = self.block_costs[d]
                 if d < shared:
+                    # Skipped prefix: the executor touches neither the
+                    # weights nor the residency here.  With an ordinary
+                    # shared prefix ``resident[d]`` already equals
+                    # ``path[d]`` (the predecessor walked it); after a
+                    # checkpoint restore it may not — those weights were
+                    # never loaded this boot, and leaving residency as-is
+                    # predicts the later reload the executor will do.
                     stats.blocks_skipped += 1
                     stats.weight_bytes_skipped += bc.weight_bytes
                     stats.flops_skipped += batch_size * bc.flops
@@ -200,7 +229,7 @@ class GraphCostModel:
                     else:
                         stats.weight_bytes_loaded += bc.weight_bytes
                     stats.flops_executed += batch_size * bc.flops
-                resident[d] = path[d]
+                    resident[d] = path[d]
             stats.tasks_run += batch_size
             if collectives is not None:
                 stats.add_collectives(collectives.breakdown(t, shared))
@@ -212,6 +241,8 @@ class GraphCostModel:
         batch_size: int = 1,
         resume: Optional[Residency] = None,
         collectives: Optional["CollectiveCosts"] = None,
+        first_task_resume: int = 0,
+        checkpoints: Optional[Sequence["CheckpointSite"]] = None,
     ) -> ExecutionStats:
         """Counter-level prediction the executor must match exactly.
 
@@ -230,6 +261,12 @@ class GraphCostModel:
 
         ``collectives`` is the executor's per-dispatch collective-byte view
         for the group's (padded) batch shape; see :meth:`_predict_into`.
+
+        ``first_task_resume`` predicts a crash-recovered group whose first
+        task resumes from a restored activation checkpoint at that depth;
+        ``checkpoints`` (a :meth:`plan_checkpoints` plan) adds the group's
+        checkpoint-write counters, which the journaling engine accounts
+        from the *same* plan — exact by construction.
         """
         resident: List[Optional[NodeId]] = (
             list(resume) if resume is not None else [None] * self.graph.depth
@@ -239,7 +276,13 @@ class GraphCostModel:
                 f"resume has {len(resident)} slots, expected {self.graph.depth}"
             )
         stats = ExecutionStats()
-        self._predict_into(order, batch_size, resident, stats, collectives)
+        self._predict_into(
+            order, batch_size, resident, stats, collectives,
+            first_task_resume=first_task_resume,
+        )
+        for site in checkpoints or ():
+            stats.checkpoint_bytes += site.bytes
+            stats.checkpoint_seconds += site.seconds
         return stats
 
     def predicted_group_stats(
@@ -338,6 +381,102 @@ class GraphCostModel:
         total = sum(self.load_cost(d) for d in depths)
         return max(total - max(overlap_seconds, 0.0), 0.0)
 
+    # ------------------------------------------------------- checkpointing
+    def checkpoint_bytes(self, depth: int, batch_size: int) -> float:
+        """Durable bytes of checkpointing depth-``depth``'s activation for a
+        ``batch_size``-request group (one activation row per request)."""
+        return float(batch_size) * self.block_costs[depth].act_bytes
+
+    def checkpoint_write_seconds(self, depth: int, batch_size: int) -> float:
+        """Modelled seconds of writing that checkpoint to the durable tier.
+
+        The durable tier is the same slow tier weights stream from (FRAM on
+        the MSP430), so the write time uses ``hw.load_seconds`` — the unit
+        convention (``hw=None``) charges 1, mirroring :meth:`load_cost`.
+        """
+        if self.hw is None:
+            return 1.0
+        return self.hw.load_seconds(self.checkpoint_bytes(depth, batch_size))
+
+    def _checkpoint_write_cost(self, depth: int, batch_size: int) -> float:
+        """Write cost in this model's metric (seconds or joules)."""
+        if self.hw is None:
+            return 1.0
+        if self.metric == "energy":
+            return self.hw.energy_joules(
+                0.0, self.checkpoint_bytes(depth, batch_size)
+            )
+        return self.checkpoint_write_seconds(depth, batch_size)
+
+    def _block_reexec_cost(self, depth: int, batch_size: int) -> float:
+        """Metric cost of re-executing one block after a power failure.
+
+        Compute-only: weight residency and activation checkpoints live in
+        the durable tier and survive the crash, so replay pays execution
+        but no loads.
+        """
+        if self.hw is None:
+            return 1.0
+        bc = self.block_costs[depth]
+        if self.metric == "energy":
+            return self.hw.energy_joules(batch_size * bc.flops, 0.0)
+        return self.hw.exec_seconds(batch_size * bc.flops)
+
+    def plan_checkpoints(
+        self,
+        order: Sequence[int],
+        batch_size: int = 1,
+        first_task_resume: int = 0,
+    ) -> List["CheckpointSite"]:
+        """Cost-chosen mid-suffix activation-checkpoint placement.
+
+        Walks the group's execution (the same walk as :meth:`_predict_into`)
+        accumulating the *re-execution* cost a power failure would incur
+        since the last durable point (group start, or the previous
+        checkpoint), and emits a checkpoint after a block exactly when that
+        accumulated cost has reached the checkpoint's own write cost — the
+        classic intermittent-computing placement rule: never spend more
+        writing state than the state saves on replay.
+
+        Sites land at block-depth boundaries strictly inside a task's
+        executed suffix (never after its final block: the group commit — or
+        the next task's own prefix sharing — covers everything beyond).
+        Both the journaling engine (execution) and the predictor consume
+        the same plan, so ``checkpoint_bytes`` / ``checkpoint_seconds``
+        stay exact by construction.
+        """
+        sites: List[CheckpointSite] = []
+        depth = self.graph.depth
+        reexec = 0.0
+        prev: Optional[int] = None
+        # Same activation-floor rule as ``_predict_into``: a task whose
+        # shared prefix ends below the restored checkpoint's floor resumes
+        # from 0 — its checkpoint sites must be planned for that walk.
+        act_floor = max(int(first_task_resume) - 1, 0)
+        for pos, t in enumerate(order):
+            if prev is None:
+                shared = int(first_task_resume)
+            else:
+                shared = self.graph.shared_prefix_depth(prev, t)
+                if 0 < shared <= act_floor:
+                    shared = 0
+            act_floor = min(act_floor, shared)
+            for d in range(shared, depth):
+                reexec += self._block_reexec_cost(d, batch_size)
+                if d >= depth - 1:
+                    continue  # suffix boundary: commit/prefix takes over
+                if reexec >= self._checkpoint_write_cost(d, batch_size):
+                    sites.append(CheckpointSite(
+                        pos=pos,
+                        task=t,
+                        depth=d,
+                        bytes=self.checkpoint_bytes(d, batch_size),
+                        seconds=self.checkpoint_write_seconds(d, batch_size),
+                    ))
+                    reexec = 0.0
+            prev = t
+        return sites
+
     def residency_after(
         self, order: Sequence[int], resident: Optional[Residency] = None
     ) -> Tuple[Optional[NodeId], ...]:
@@ -354,6 +493,24 @@ class GraphCostModel:
         if resident is None:
             return (None,) * self.graph.depth
         return tuple(resident)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointSite:
+    """One planned mid-suffix activation checkpoint.
+
+    ``pos`` indexes the group's execution order, ``task``/``depth`` name the
+    block-depth boundary the checkpoint follows (the executor cuts its fused
+    suffix there and fires the journal hook), and ``bytes``/``seconds`` are
+    the durable write's modelled cost — the exact values both the executed
+    counters and the prediction add.
+    """
+
+    pos: int
+    task: int
+    depth: int
+    bytes: float
+    seconds: float
 
 
 class PlanPredictor:
@@ -403,6 +560,8 @@ class PlanPredictor:
         extra_tasks_skipped: int = 0,
         collectives: Optional["CollectiveCosts"] = None,
         overlap_seconds: Optional[float] = None,
+        first_task_resume: int = 0,
+        checkpoints: Optional[Sequence[CheckpointSite]] = None,
     ) -> ExecutionStats:
         """Account one more admitted group; returns that group's delta.
 
@@ -417,6 +576,13 @@ class PlanPredictor:
         seconds, so the delta's ``prefetched_bytes`` equals its loaded bytes
         and ``stream_stall_seconds`` is whatever portion of the load time
         did not fit in the window (``GraphCostModel.prefetch_stall_seconds``).
+
+        ``first_task_resume`` and ``checkpoints`` predict an
+        intermittent-execution group: the former a crash-recovered group
+        resuming its first task from a restored activation checkpoint, the
+        latter the group's planned checkpoint writes
+        (``GraphCostModel.plan_checkpoints``) folded into
+        ``checkpoint_bytes`` / ``checkpoint_seconds``.
         """
         if not self.carry_residency:
             self._resident = [None] * self.model.graph.depth
@@ -427,8 +593,12 @@ class PlanPredictor:
         )
         delta = ExecutionStats()
         self.model._predict_into(
-            order, int(batch_size), self._resident, delta, collectives
+            order, int(batch_size), self._resident, delta, collectives,
+            first_task_resume=first_task_resume,
         )
+        for site in checkpoints or ():
+            delta.checkpoint_bytes += site.bytes
+            delta.checkpoint_seconds += site.seconds
         if overlap_seconds is not None and loads:
             delta.prefetched_bytes = sum(
                 self.model.block_costs[d].weight_bytes for d, _node in loads

@@ -108,6 +108,24 @@ def _leaf_specs(params: Any) -> Tuple:
     return treedef, tuple((jnp.shape(l), jnp.result_type(l)) for l in leaves)
 
 
+@dataclasses.dataclass
+class ActivationCheckpoint:
+    """A mid-suffix activation snapshot at a block-depth boundary.
+
+    ``value`` is the cached activation of ``node`` (the block at ``depth``
+    on the interrupted task's path) and ``act_shape`` the input-shape guard
+    it was produced under (``TaskGraphExecutor._act_shape``).  Restoring it
+    (:meth:`TaskGraphExecutor.restore_activation`) makes the next matching
+    task resume from ``depth + 1`` instead of 0 — the paper's "an inference
+    interrupted at block k must not restart from block 0" property.
+    """
+
+    depth: int
+    node: NodeId
+    value: Any
+    act_shape: Optional[Tuple[int, ...]] = None
+
+
 class WeightStreamer:
     """Double-buffered asynchronous host->device weight stager.
 
@@ -281,8 +299,13 @@ class TaskGraphExecutor:
         # (task, resume, batched, x_shape, x_dtype) -> (callable, mode); mode
         # is "scan" (stacked params + lax.scan) or "unrolled".
         self._compiled_fused: Dict[Tuple, Tuple[Callable, str]] = {}
+        # (task, start, stop, batched, x_shape, x_dtype) -> (callable, mode):
+        # headless segment programs for checkpointed (intermittent) suffixes.
+        self._compiled_segment: Dict[Tuple, Tuple[Callable, str]] = {}
         # (task, resume) -> stacked suffix params for the scan mode.
         self._stacked_params: Dict[Tuple[int, int], Any] = {}
+        # (task, start, stop) -> stacked segment params for the scan mode.
+        self._stacked_seg_params: Dict[Tuple[int, int, int], Any] = {}
         # Mesh-placed parameter copies (input-independent; survive reset).
         self._placed_node: Dict[NodeId, Any] = {}
         self._placed_head: Dict[int, Any] = {}
@@ -377,6 +400,46 @@ class TaskGraphExecutor:
         self._resident = list(state)
         self.streamer.invalidate()
         self.clear_activations()
+
+    def activation_checkpoint(
+        self, task: int
+    ) -> Optional["ActivationCheckpoint"]:
+        """Snapshot the deepest cached activation along ``task``'s path.
+
+        This is what the serving journal persists at a segmented suffix's
+        commit points: one ``(depth, node, value)`` triple is enough to
+        resume the interrupted suffix, because the task graph is a tree —
+        the node identity pins the whole prefix chain that produced the
+        value.  Returns ``None`` when nothing on the path is cached.
+        """
+        path = self.program.graph.path(task)
+        best: Optional[int] = None
+        for d, node in enumerate(path):
+            if self._act_owner[d] == node and self._activations[d] is not None:
+                best = d
+        if best is None:
+            return None
+        return ActivationCheckpoint(
+            depth=best,
+            node=path[best],
+            value=self._activations[best],
+            act_shape=self._act_shape,
+        )
+
+    def restore_activation(self, ckpt: "ActivationCheckpoint") -> None:
+        """Re-seed the activation cache from a journaled crash checkpoint.
+
+        All other activation slots are cleared (they did not survive the
+        power failure); the next task sharing the checkpoint's node resumes
+        from ``ckpt.depth + 1`` instead of 0.  Call *after*
+        :meth:`set_residency` — restoring residency clears activations.
+        """
+        self.clear_activations()
+        self._activations[ckpt.depth] = jnp.asarray(ckpt.value)
+        self._act_owner[ckpt.depth] = ckpt.node
+        self._act_shape = (
+            tuple(ckpt.act_shape) if ckpt.act_shape is not None else None
+        )
 
     def _guard_act_shape(self, shape: Tuple[int, ...]) -> None:
         """Invalidate cached activations produced for a different input shape
@@ -617,12 +680,175 @@ class TaskGraphExecutor:
             self._act_owner[d] = path[d]
         return out
 
-    def _run_suffix_blocks(
-        self, task: int, resume: int, h: jnp.ndarray, batched: bool
+    # ----------------------------------------------- segmented (checkpoint)
+    def _segment_params(self, task: int, start: int, stop: int) -> Tuple[Any, ...]:
+        path = self.program.graph.path(task)
+        return tuple(self._node_param(path[d]) for d in range(start, stop))
+
+    def _stacked_segment_params(self, task: int, start: int, stop: int) -> Any:
+        key = (task, start, stop)
+        if key not in self._stacked_seg_params:
+            path = self.program.graph.path(task)
+            params = tuple(
+                self.program.node_params[path[d]] for d in range(start, stop)
+            )
+            stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *params)
+            if self.mesh is not None:
+                stacked = jax.tree_util.tree_map(
+                    lambda l: self._place_param_leaf(l, stacked=True), stacked
+                )
+            self._stacked_seg_params[key] = stacked
+        return self._stacked_seg_params[key]
+
+    def _segment_fn(
+        self,
+        task: int,
+        start: int,
+        stop: int,
+        batched: bool,
+        shape: Tuple[int, ...],
+        dtype: Any,
+    ) -> Tuple[Callable, str]:
+        """Build (or fetch) a *headless* fused program for blocks
+        ``start .. stop-1`` of ``task``'s path.
+
+        The segmented variant of :meth:`_fused_fn`: a checkpointed suffix is
+        cut at its commit depths, each cut dispatching one of these segment
+        programs so the Python-level journal hook can run — and a power
+        failure can strike — at the block-depth boundary between them.  Same
+        mode selection as the full-suffix program: ``lax.scan`` over stacked
+        homogeneous shape-preserving blocks, else unrolled in one program.
+        Returns the per-depth activations only (the final segment of a
+        checkpointed suffix still runs through :meth:`_fused_fn`, which owns
+        the head).
+        """
+        shape = tuple(shape)
+        dtype = jnp.dtype(dtype)
+        key = (task, start, stop, batched, shape, dtype)
+        if key in self._compiled_segment:
+            return self._compiled_segment[key]
+
+        segment = list(range(start, stop))
+        base_fns = [self.program.block_fns[d] for d in segment]
+        if batched:
+            fns = [jax.vmap(f, in_axes=(None, 0)) for f in base_fns]
+        else:
+            fns = list(base_fns)
+        cst = self._act_constrainer(batched)
+
+        mode = "unrolled"
+        if len(segment) >= 2 and all(f is base_fns[0] for f in base_fns):
+            params = self._segment_params(task, start, stop)
+            specs = {_leaf_specs(p) for p in params}
+            if len(specs) == 1:
+                try:
+                    spec = jax.eval_shape(
+                        fns[0], params[0], jax.ShapeDtypeStruct(shape, dtype)
+                    )
+                except (
+                    TypeError, ValueError, jax.errors.ConcretizationTypeError
+                ):
+                    spec = None
+                if (
+                    spec is not None
+                    and spec.shape == shape
+                    and spec.dtype == dtype
+                ):
+                    mode = "scan"
+
+        if mode == "scan":
+            step_fn = fns[0]
+
+            def seg(stacked, h):
+                def step(carry, p):
+                    y = step_fn(p, carry)
+                    if cst is not None:
+                        y = cst(y)
+                    return y, y
+
+                _h_last, acts = jax.lax.scan(step, h, stacked)
+                return acts
+
+        else:
+
+            def seg(params_tuple, h):
+                acts = []
+                for f, p in zip(fns, params_tuple):
+                    h = f(p, h)
+                    if cst is not None:
+                        h = cst(h)
+                    acts.append(h)
+                return tuple(acts)
+
+        compiled = jax.jit(seg) if self._jit else seg
+        self._compiled_segment[key] = (compiled, mode)
+        return compiled, mode
+
+    def _run_suffix_segmented(
+        self,
+        task: int,
+        resume: int,
+        h: jnp.ndarray,
+        batched: bool,
+        checkpoint_depths: Sequence[int],
+        checkpoint_hook: Optional[Callable[[int], None]],
     ) -> jnp.ndarray:
-        """Reference path: one dispatch per block plus one for the head."""
+        """Checkpointed suffix: commit points at block-depth boundaries.
+
+        Each checkpoint depth ``d`` in ``[resume, depth-1)`` ends a segment
+        dispatch after block ``d``; the hook then fires with the activation
+        for depth ``d`` freshly cached — the journal write, and the point a
+        :class:`~repro.serving.reliability.PowerFailureInjector` kills the
+        session.  The remainder past the last cut runs through the ordinary
+        fused program (:meth:`_run_suffix_fused`), so an uncut suffix is
+        byte-identical to the non-intermittent path.  Counters never change
+        — segmentation only adds dispatches (and the hook's own checkpoint
+        accounting).
+        """
         graph = self.program.graph
         path = graph.path(task)
+        cur = resume
+        for d in sorted(set(checkpoint_depths)):
+            if d < cur or d >= graph.depth - 1:
+                continue  # already covered, or past the last cut point
+            fn, mode = self._segment_fn(
+                task, cur, d + 1, batched, tuple(h.shape), jnp.result_type(h)
+            )
+            if mode == "scan":
+                acts = fn(self._stacked_segment_params(task, cur, d + 1), h)
+                acts = [acts[i] for i in range(d + 1 - cur)]
+            else:
+                acts = fn(self._segment_params(task, cur, d + 1), h)
+            self.dispatch_count += 1
+            for a, dd in zip(acts, range(cur, d + 1)):
+                self._activations[dd] = a
+                self._act_owner[dd] = path[dd]
+            h = self._activations[d]
+            if checkpoint_hook is not None:
+                checkpoint_hook(d)
+            cur = d + 1
+        return self._run_suffix_fused(task, cur, h, batched)
+
+    def _run_suffix_blocks(
+        self,
+        task: int,
+        resume: int,
+        h: jnp.ndarray,
+        batched: bool,
+        checkpoint_depths: Sequence[int] = (),
+        checkpoint_hook: Optional[Callable[[int], None]] = None,
+    ) -> jnp.ndarray:
+        """Reference path: one dispatch per block plus one for the head.
+
+        Checkpoint hooks fire at the same block-depth boundaries as the
+        segmented fused path, so the degradation ladder's unfused rung keeps
+        journaling (and checkpoint accounting) identical.
+        """
+        graph = self.program.graph
+        path = graph.path(task)
+        cuts = {
+            d for d in checkpoint_depths if resume <= d < graph.depth - 1
+        }
         block_fn = self._block_fn_batch if batched else self._block_fn
         head_fn = self._head_fn_batch if batched else self._head_fn
         for d in range(resume, graph.depth):
@@ -631,6 +857,8 @@ class TaskGraphExecutor:
             self.dispatch_count += 1
             self._activations[d] = h
             self._act_owner[d] = node
+            if d in cuts and checkpoint_hook is not None:
+                checkpoint_hook(d)
         out = head_fn(task)(self._head_param(task), h)
         self.dispatch_count += 1
         return out
@@ -643,6 +871,8 @@ class TaskGraphExecutor:
         stats: ExecutionStats,
         weight: int,
         batched: bool,
+        checkpoint_depths: Sequence[int] = (),
+        checkpoint_hook: Optional[Callable[[int], None]] = None,
     ) -> jnp.ndarray:
         """Shared body of the single-request and batched task execution.
 
@@ -656,13 +886,15 @@ class TaskGraphExecutor:
         path = graph.path(task)
         self._guard_act_shape(tuple(x.shape))
 
-        # Deepest prefix of this task's path whose activations are cached.
+        # Deepest block of this task's path whose activation is cached.  The
+        # task graph is a tree, so an owner match at depth ``d`` pins the
+        # whole chain above it — contiguity below is not required, which is
+        # what lets a single restored crash checkpoint
+        # (:meth:`restore_activation`) seed a mid-path resume.
         resume = 0
         for d, node in enumerate(path):
             if self._act_owner[d] == node and self._activations[d] is not None:
                 resume = d + 1
-            else:
-                break
 
         for d in range(graph.depth):
             node = path[d]
@@ -704,8 +936,15 @@ class TaskGraphExecutor:
                 task, resume, tuple(h.shape), jnp.result_type(h), batched
             ))
         if self._fused:
+            if checkpoint_depths:
+                return self._run_suffix_segmented(
+                    task, resume, h, batched,
+                    checkpoint_depths, checkpoint_hook,
+                )
             return self._run_suffix_fused(task, resume, h, batched)
-        return self._run_suffix_blocks(task, resume, h, batched)
+        return self._run_suffix_blocks(
+            task, resume, h, batched, checkpoint_depths, checkpoint_hook
+        )
 
     def run_task(
         self, task: int, x: jnp.ndarray, stats: ExecutionStats
@@ -749,6 +988,8 @@ class TaskGraphExecutor:
         xs: jnp.ndarray,
         stats: ExecutionStats,
         weight: Optional[int] = None,
+        checkpoint_depths: Sequence[int] = (),
+        checkpoint_hook: Optional[Callable[[int], None]] = None,
     ) -> jnp.ndarray:
         """Run one task for a stacked request group ``xs``: ``(B, *sample)``.
 
@@ -764,9 +1005,18 @@ class TaskGraphExecutor:
         scheduler the unpadded count).  Flop/task counters scale by
         ``weight``; load counters stay physical (once per group) — that gap
         *is* the block-loads-saved of batching.
+
+        ``checkpoint_depths`` / ``checkpoint_hook`` select the segmented
+        (intermittent) dispatch: the suffix is cut at those block-depth
+        boundaries and the hook fires after each cut with the activation
+        freshly cached — see :meth:`_run_suffix_segmented`.
         """
         w = int(xs.shape[0]) if weight is None else int(weight)
-        return self._run_task_impl(task, xs, stats, w, batched=True)
+        return self._run_task_impl(
+            task, xs, stats, w, batched=True,
+            checkpoint_depths=checkpoint_depths,
+            checkpoint_hook=checkpoint_hook,
+        )
 
     def run_batch(
         self,

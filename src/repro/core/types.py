@@ -165,6 +165,15 @@ class ExecutionStats:
     # stay zero on engines without ``EnginePolicy.streaming``.
     prefetched_bytes: float = 0.0
     stream_stall_seconds: float = 0.0
+    # Intermittent-execution counters: bytes of mid-suffix activation
+    # checkpoints written to the durable tier (FRAM on the paper's MSP430)
+    # and the modelled seconds those writes took.  Placement is chosen by
+    # ``GraphCostModel.plan_checkpoints`` (checkpoint only when the expected
+    # re-execution cost exceeds the write cost), so both sides of the
+    # ``session.stats == session.predicted`` invariant add identical terms.
+    # Zero on engines without a journal.
+    checkpoint_bytes: float = 0.0
+    checkpoint_seconds: float = 0.0
 
     @property
     def collective_bytes(self) -> float:
@@ -222,10 +231,25 @@ class ExecutionStats:
             self.compute_seconds(hw)
             + hw.load_seconds(sync_bytes / max(weight_shards, 1))
             + self.stream_stall_seconds
+            + self.checkpoint_seconds
         )
 
     def energy(self, hw: HardwareModel) -> float:
-        return hw.energy_joules(self.flops_executed, 2.0 * self.weight_bytes_loaded)
+        return hw.energy_joules(
+            self.flops_executed,
+            2.0 * self.weight_bytes_loaded + self.checkpoint_bytes,
+        )
+
+    def compute_energy(self, hw: HardwareModel) -> float:
+        """Joules of the compute term alone (no loads, no checkpoints).
+
+        This is the energy a power failure can waste: weight residency and
+        checkpoints live in the durable tier and survive a crash, but any
+        compute since the last durable point must be re-executed on the next
+        charge cycle.  The intermittent benchmark's re-execution gate
+        compares this term across recovery strategies.
+        """
+        return hw.energy_joules(self.flops_executed, 0.0)
 
     def merge(self, other: "ExecutionStats") -> "ExecutionStats":
         return ExecutionStats(
@@ -248,5 +272,9 @@ class ExecutionStats:
             prefetched_bytes=self.prefetched_bytes + other.prefetched_bytes,
             stream_stall_seconds=(
                 self.stream_stall_seconds + other.stream_stall_seconds
+            ),
+            checkpoint_bytes=self.checkpoint_bytes + other.checkpoint_bytes,
+            checkpoint_seconds=(
+                self.checkpoint_seconds + other.checkpoint_seconds
             ),
         )

@@ -164,7 +164,10 @@ def _mem_dict(mem) -> dict:
     ):
         try:
             out[attr] = float(getattr(mem, attr))
-        except Exception:
+        except (AttributeError, TypeError):
+            # Only the expected shape mismatches across jaxlib versions: a
+            # missing accessor or a non-numeric return.  Anything else
+            # (e.g. a RuntimeError from a dead backend) should surface.
             pass
     if not out and mem is not None:
         out["repr"] = str(mem)[:2000]

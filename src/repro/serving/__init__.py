@@ -12,21 +12,31 @@ errors (``RequestError`` / ``DeadlineExceeded`` / ``QueueFull``), the
 group-recovery ``RetryPolicy`` (rollback + bounded backoff + degradation
 ladder), per-tenant ``TenantStats``, and the deterministic
 ``FaultInjector`` the chaos benchmark drives.
+
+Intermittent-power serving lives in ``repro.serving.journal`` (the durable
+write-ahead ``Journal`` + ``ServingSession.recover``) and
+``repro.serving.reliability`` (``PowerFailure`` / ``PowerFailureInjector``
+for whole-session power loss, ``EnergyBudget`` for duty-cycled
+energy-harvesting execution).
 """
 from repro.serving.batching import (
     ContinuousBatcher, GenRequest, GenResult, RequestGroup,
     RequestGroupScheduler, effective_order, normalize_subset, order_groups,
 )
 from repro.serving.engine import (
-    GroupExecution, LMServer, MultitaskEngine, MultitaskRequest,
-    MultitaskResponse,
+    GroupExecution, IntermittentContext, LMServer, MultitaskEngine,
+    MultitaskRequest, MultitaskResponse,
+)
+from repro.serving.journal import (
+    FileJournalStore, Journal, JournalState, JournalStore, MemoryJournalStore,
 )
 from repro.serving.policies import (
     AffinityPolicy, EnginePolicy, GreedyBatchPolicy, SchedulingPolicy,
     SloAwarePolicy, WindowPolicy,
 )
 from repro.serving.reliability import (
-    FAULT_SITES, DeadlineExceeded, FaultInjector, InjectedFault, QueueFull,
+    FAULT_SITES, POWER_SITES, DeadlineExceeded, EnergyBudget, FaultInjector,
+    InjectedFault, PowerFailure, PowerFailureInjector, QueueFull,
     RequestError, RetryPolicy, TenantStats,
 )
 from repro.serving.session import (
@@ -60,6 +70,17 @@ __all__ = [
     "FaultInjector",
     "TenantStats",
     "FAULT_SITES",
+    # intermittent power
+    "Journal",
+    "JournalState",
+    "JournalStore",
+    "MemoryJournalStore",
+    "FileJournalStore",
+    "IntermittentContext",
+    "PowerFailure",
+    "PowerFailureInjector",
+    "POWER_SITES",
+    "EnergyBudget",
     # request grouping
     "RequestGroup",
     "RequestGroupScheduler",

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constraints import Constraints
-from repro.core.cost_model import GraphCostModel
+from repro.core.cost_model import CheckpointSite, GraphCostModel
 from repro.core.executor import MultitaskProgram, TaskGraphExecutor
 from repro.core.ordering import optimal_order, solve_suborder
 from repro.core.types import ExecutionStats, HardwareModel, TPU_V5E
@@ -37,8 +37,9 @@ from repro.serving.policies import EnginePolicy
 from repro.sharding.policy import ShardingPolicy, TP_POLICY
 
 if TYPE_CHECKING:  # session imports engine; keep the runtime import lazy
+    from repro.serving.journal import Journal
     from repro.serving.policies import SchedulingPolicy
-    from repro.serving.reliability import FaultInjector
+    from repro.serving.reliability import FaultInjector, PowerFailureInjector
     from repro.serving.session import ServingSession
 
 
@@ -107,6 +108,26 @@ class MultitaskResponse:
     # fallback executor), ``None`` for the primary path.
     retries: int = 0
     degraded: Optional[str] = None
+    # True when this response was rebuilt from a durable journal commit by
+    # ``ServingSession.recover`` instead of produced by a live execution —
+    # the exactly-once path after a power failure.
+    recovered: bool = False
+
+
+@dataclasses.dataclass
+class IntermittentContext:
+    """Journaling context threaded through one group's execution.
+
+    Built by the session (the journal's owner) per group: ``journal`` /
+    ``group_id`` let the engine's checkpoint hook write durable mid-suffix
+    activation records under the group's identity, and ``checkpointing``
+    turns the segmented dispatch on or off (the restart-from-scratch
+    comparator arm journals begins/commits but never cuts a suffix).
+    """
+
+    journal: "Journal"
+    group_id: int
+    checkpointing: bool = True
 
 
 @dataclasses.dataclass
@@ -174,6 +195,7 @@ class MultitaskEngine:
         group_ordering: Optional[bool] = None,
         policy: Optional[EnginePolicy] = None,
         fault_injector: Optional["FaultInjector"] = None,
+        power_injector: Optional["PowerFailureInjector"] = None,
     ):
         self.program = program
         self.hw = hw
@@ -244,6 +266,14 @@ class MultitaskEngine:
         # may raise.  Mutable on purpose — the chaos harness arms and
         # disarms it around specific traces.
         self.fault_injector = fault_injector
+        # Whole-session power-failure hook (intermittent computing; see
+        # repro.serving.reliability.PowerFailureInjector).  Checked at the
+        # "group" / "suffix" / "prefetch" sites; raises PowerFailure — a
+        # BaseException the session's retry machinery never absorbs.  Like
+        # the fault injector, mutable on purpose; unlike it, the instance
+        # should live *outside* the session so its schedule survives the
+        # reboots it causes.
+        self.power_injector = power_injector
         # Lazily built off-mesh executor for the degradation ladder's
         # "single_device" rung (mesh engines only; see execute_group_fallback).
         self._fallback_executor: Optional[TaskGraphExecutor] = None
@@ -443,11 +473,21 @@ class MultitaskEngine:
         if self.fault_injector is not None:
             self.fault_injector.check(site, **context)
 
+    def _power(self, site: str, **context: Any) -> None:
+        """Power-failure hook: delegates to :attr:`power_injector` when
+        armed; a no-op otherwise.  Unlike :meth:`_inject`, a firing site
+        raises a ``BaseException`` that kills the whole session — the
+        recovery story is the durable journal, not the retry ladder."""
+        if self.power_injector is not None:
+            self.power_injector.check(site, **context)
+
     def _run_group(
         self,
         group: RequestGroup,
         eff: Sequence[int],
         executor: Optional[TaskGraphExecutor] = None,
+        intermittent: Optional[IntermittentContext] = None,
+        ckpt_plan: Optional[Sequence["CheckpointSite"]] = None,
     ) -> Tuple[List[Dict[int, jax.Array]], ExecutionStats]:
         """Execute one homogeneous request group through the batched path.
 
@@ -478,11 +518,72 @@ class MultitaskEngine:
             if fired == 0:
                 continue
             self._inject("dispatch", task=t, group_tasks=group.tasks)
-            out = ex.run_task_batch(t, group.xs, stats, weight=fired)
+            if intermittent is not None:
+                # ``stats`` rides along so a crash's PowerFailure carries
+                # the partial (about-to-be-lost) counters — the benchmark's
+                # re-executed-energy accounting reads them off the context.
+                self._power(
+                    "group", task=t, group_id=intermittent.group_id,
+                    group_tasks=group.tasks, stats=stats,
+                )
+            sites = [s for s in (ckpt_plan or ()) if s.task == t]
+            if sites and intermittent is not None:
+                hook = self._checkpoint_hook(
+                    ex, stats, intermittent, t, sites, fired,
+                )
+                out = ex.run_task_batch(
+                    t, group.xs, stats, weight=fired,
+                    checkpoint_depths=[s.depth for s in sites],
+                    checkpoint_hook=hook,
+                )
+            else:
+                out = ex.run_task_batch(t, group.xs, stats, weight=fired)
             for i in range(v):
                 if fire[i]:
                     per_request[i][t] = out[i]
         return per_request, stats
+
+    def _checkpoint_hook(
+        self,
+        ex: TaskGraphExecutor,
+        stats: ExecutionStats,
+        intermittent: IntermittentContext,
+        task: int,
+        sites: Sequence[CheckpointSite],
+        weight: int = 1,
+    ) -> Callable[[int], None]:
+        """Build the commit-point callback for one task's segmented suffix.
+
+        Fired by the executor right after the block at a planned depth has
+        executed: journal the freshly cached activation durably, account the
+        write with the *planned* site's bytes/seconds (the same values
+        :meth:`GraphCostModel.predicted_stats` adds from the same plan — the
+        counter-exactness invariant extended to checkpoints), then give the
+        power injector its "suffix" site — a failure here dies *after* the
+        durable write, which is exactly what makes the checkpoint useful.
+        """
+        by_depth = {s.depth: s for s in sites}
+
+        def hook(depth: int) -> None:
+            site = by_depth[depth]
+            ck = ex.activation_checkpoint(task)
+            if ck is not None:
+                intermittent.journal.checkpoint(
+                    intermittent.group_id, site.pos, task,
+                    ck.depth, ck.node, ck.value, ck.act_shape,
+                )
+            stats.checkpoint_bytes += site.bytes
+            stats.checkpoint_seconds += site.seconds
+            # ``weight`` lets a crash's consumer correct the task's upfront
+            # flop accounting down to the blocks actually executed by
+            # ``depth`` — the executor charges a task's whole suffix to
+            # ``stats`` before dispatching it.
+            self._power(
+                "suffix", task=task, depth=depth,
+                group_id=intermittent.group_id, stats=stats, weight=weight,
+            )
+
+        return hook
 
     def prefetch_group(
         self, group: RequestGroup, overlap_seconds: float = 0.0
@@ -507,6 +608,7 @@ class MultitaskEngine:
         loading.
         """
         self._inject("prefetch", group_tasks=group.tasks, valid=group.valid)
+        self._power("prefetch", group_tasks=group.tasks, valid=group.valid)
         eff = self.group_order(group)
         loads = self.cost_model.plan_loads(
             eff, self.executor.residency_state()
@@ -521,7 +623,13 @@ class MultitaskEngine:
             self.program.block_costs[d].weight_bytes for d, _node in loads
         ))
 
-    def _execute_group(self, group: RequestGroup) -> GroupExecution:
+    def _execute_group(
+        self,
+        group: RequestGroup,
+        intermittent: Optional[IntermittentContext] = None,
+        first_task_resume: int = 0,
+        keep_activations: bool = False,
+    ) -> GroupExecution:
         """Run one planned group; the session's execution primitive.
 
         Handles the warm/cold group boundary (keep residency and drop
@@ -531,9 +639,22 @@ class MultitaskEngine:
         returns everything a response needs — without building responses,
         so the session can defer future resolution behind the next group's
         planning.
+
+        ``intermittent`` (journal + group id) selects the power-failure-
+        atomic path: the cost model places mid-suffix checkpoints
+        (:meth:`GraphCostModel.plan_checkpoints`) and execution journals
+        each one at the matching segment boundary.  ``first_task_resume`` /
+        ``keep_activations`` serve crash recovery: a group resuming from a
+        restored activation checkpoint at depth ``d`` enters with
+        ``first_task_resume=d+1`` and must *not* clear the activation cache
+        at the boundary — the restored checkpoint is the whole point.
         """
         self._inject("plan", group_tasks=group.tasks, valid=group.valid)
-        if self.warm_start:
+        if keep_activations:
+            # Crash recovery: residency and the restored checkpoint were
+            # seeded by ``ServingSession.recover`` — touch neither.
+            pass
+        elif self.warm_start:
             # Warm boundary: keep residency, never the previous group's
             # activations (they belong to different inputs).
             self.executor.clear_activations()
@@ -541,9 +662,17 @@ class MultitaskEngine:
             self.executor.reset()  # cold per group (reference semantics)
         eff = self.group_order(group)
         resume = self.executor.residency_state() if self.warm_start else None
+        ckpt_plan: Optional[List[CheckpointSite]] = None
+        if intermittent is not None and intermittent.checkpointing:
+            ckpt_plan = self.cost_model.plan_checkpoints(
+                eff, batch_size=group.valid,
+                first_task_resume=first_task_resume,
+            )
         predicted = self.cost_model.predicted_stats(
             eff, batch_size=group.valid, resume=resume,
             collectives=self.executor.collective_view(group.xs),
+            first_task_resume=first_task_resume,
+            checkpoints=ckpt_plan,
         )
         warm_saved = 0.0
         if self.warm_start:
@@ -574,7 +703,9 @@ class MultitaskEngine:
                 predicted.stream_stall_seconds = streamer.pending_stall_seconds
         predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
         self._inject("load", group_tasks=group.tasks, resume=resume)
-        per_request, stats = self._run_group(group, eff)
+        per_request, stats = self._run_group(
+            group, eff, intermittent=intermittent, ckpt_plan=ckpt_plan
+        )
         stats.stream_stall_seconds += streamer.finish_group()
         return GroupExecution(
             group=group, eff=eff, outputs=per_request, stats=stats,

@@ -1,0 +1,389 @@
+"""Write-ahead serving journal for power-failure-atomic execution.
+
+Antler's flagship platform (a batteryless MSP430FR5994) loses power as a
+matter of course; what survives is the FRAM.  This module is the serving
+stack's FRAM: a small append-only **write-ahead journal** the session writes
+*before* acting, so that after a whole-process power failure a fresh session
+(:meth:`~repro.serving.session.ServingSession.recover`) can reconstruct
+
+* the admission queue — every admitted request is journaled at submit, so a
+  crash never loses a request that was acknowledged;
+* exactly-once responses — a group's outputs are journaled atomically at
+  **commit**; a committed group is never re-run (its responses are rebuilt
+  from the journal), an uncommitted group is re-run in full;
+* the executor's weight residency — committed alongside each group, the
+  "weights live in the durable tier" model of the paper's FRAM deployment;
+* mid-suffix progress — segmented fused suffixes write an
+  **activation checkpoint** at cost-model-chosen block-depth boundaries
+  (``GraphCostModel.plan_checkpoints``), so an inference interrupted at
+  block ``d`` resumes from ``d``, not from 0.
+
+Replay (:meth:`Journal.replay`) is a pure, idempotent fold over the record
+stream: replaying twice — or replaying a journal that already contains a
+recovery's own records — produces the same :class:`JournalState`.
+Duplicate commits for one group are ignored after the first, which is the
+exactly-once guarantee.
+
+Two stores: :class:`MemoryJournalStore` (the simulation's FRAM — it outlives
+the session object the way FRAM outlives a power cycle) and
+:class:`FileJournalStore` (JSON-lines on disk, fsync'd per record, arrays
+round-tripped losslessly), selected per :class:`Journal`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.types import ExecutionStats, NodeId
+
+__all__ = [
+    "Journal",
+    "JournalState",
+    "JournalStore",
+    "MemoryJournalStore",
+    "FileJournalStore",
+]
+
+
+# ------------------------------------------------------------------ stores
+class JournalStore:
+    """Append-only durable record store (the "FRAM" interface).
+
+    ``append`` must be atomic at record granularity: a record is either
+    durably present in ``records()`` after ``append`` returns, or absent —
+    never torn.  Both built-in stores satisfy this trivially (list append;
+    single-line write + flush + fsync).
+    """
+
+    def append(self, record: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def records(self) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+
+class MemoryJournalStore(JournalStore):
+    """In-memory store: the simulated nonvolatile tier.
+
+    The intermittent benchmark keeps this object *outside* the session, so
+    it survives the simulated power failure exactly as FRAM survives a real
+    one, while the session (SRAM) is rebuilt from scratch.
+    """
+
+    def __init__(self) -> None:
+        self._records: List[Dict[str, Any]] = []
+
+    def append(self, record: Dict[str, Any]) -> None:
+        self._records.append(record)
+
+    def records(self) -> List[Dict[str, Any]]:
+        return list(self._records)
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+
+class FileJournalStore(JournalStore):
+    """JSON-lines file store, fsync'd per record.
+
+    Arrays are encoded as ``{"__ndarray__": {dtype, shape, data}}`` leaves
+    and decoded back to ``numpy`` on read, so a journal written before a
+    real process death replays bit-exactly (for integer dtypes) or
+    value-exactly (floats round-trip through ``tolist`` at full repr
+    precision via JSON).
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = str(path)
+
+    def append(self, record: Dict[str, Any]) -> None:
+        line = json.dumps(_encode(record), separators=(",", ":"))
+        with open(self.path, "a", encoding="utf-8") as fh:
+            fh.write(line + "\n")
+            fh.flush()
+            os.fsync(fh.fileno())
+
+    def records(self) -> List[Dict[str, Any]]:
+        if not os.path.exists(self.path):
+            return []
+        out: List[Dict[str, Any]] = []
+        with open(self.path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    out.append(_decode(json.loads(line)))
+        return out
+
+
+def _encode(obj: Any) -> Any:
+    """Recursively encode a record for JSON (arrays -> tagged leaves)."""
+    if isinstance(obj, np.ndarray):
+        return {
+            "__ndarray__": {
+                "dtype": obj.dtype.name,
+                "shape": list(obj.shape),
+                "data": obj.ravel().tolist(),
+            }
+        }
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _decode(obj: Any) -> Any:
+    """Inverse of :func:`_encode` (JSON lists stay lists)."""
+    if isinstance(obj, dict):
+        if "__ndarray__" in obj and len(obj) == 1:
+            spec = obj["__ndarray__"]
+            return np.asarray(
+                spec["data"], dtype=np.dtype(spec["dtype"])
+            ).reshape(spec["shape"])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+# ------------------------------------------------------------- (de)coding
+def _encode_node(node: Optional[NodeId]) -> Optional[List[Any]]:
+    if node is None:
+        return None
+    depth, group = node
+    return [int(depth), [int(t) for t in group]]
+
+
+def _decode_node(enc: Optional[Sequence[Any]]) -> Optional[NodeId]:
+    if enc is None:
+        return None
+    depth, group = enc
+    return (int(depth), tuple(int(t) for t in group))
+
+
+def _as_host(value: Any) -> np.ndarray:
+    """Materialise a (possibly device) array on the host for journaling."""
+    return np.asarray(value)
+
+
+# -------------------------------------------------------------- journal
+class Journal:
+    """The serving session's write-ahead journal over a pluggable store.
+
+    Record kinds (in the order a healthy group produces them)::
+
+        admit         request acknowledged (payload: input, tasks, SLOs)
+        group_begin   group planned: members, execution order, valid rows
+        checkpoint    mid-suffix activation at a block-depth commit point
+        group_commit  outputs + counters + post-group residency, atomically
+        request_failed  request reached a durable non-response outcome
+
+    Writers call the typed methods; readers call :meth:`replay`.
+    """
+
+    def __init__(self, store: Optional[JournalStore] = None) -> None:
+        self.store = store if store is not None else MemoryJournalStore()
+
+    # -------------------------------------------------------------- writes
+    def admit(
+        self,
+        seq: int,
+        x: Any,
+        tasks: Optional[Sequence[int]],
+        deadline: Optional[float] = None,
+        priority: int = 0,
+        tenant: Optional[str] = None,
+    ) -> None:
+        self.store.append({
+            "kind": "admit",
+            "seq": int(seq),
+            "x": _as_host(x),
+            "tasks": None if tasks is None else [int(t) for t in tasks],
+            "deadline": None if deadline is None else float(deadline),
+            "priority": int(priority),
+            "tenant": tenant,
+        })
+
+    def request_failed(self, seq: int) -> None:
+        """A durable terminal non-response outcome (expired, shed, or the
+        group ladder ran out): recovery must not resurrect this request."""
+        self.store.append({"kind": "request_failed", "seq": int(seq)})
+
+    def group_begin(
+        self,
+        group_id: int,
+        seqs: Sequence[int],
+        order: Sequence[int],
+        valid: int,
+    ) -> None:
+        self.store.append({
+            "kind": "group_begin",
+            "group_id": int(group_id),
+            "seqs": [int(s) for s in seqs],
+            "order": [int(t) for t in order],
+            "valid": int(valid),
+        })
+
+    def checkpoint(
+        self,
+        group_id: int,
+        pos: int,
+        task: int,
+        depth: int,
+        node: NodeId,
+        value: Any,
+        act_shape: Optional[Sequence[int]],
+    ) -> None:
+        """One mid-suffix activation checkpoint: the suffix of ``task`` (at
+        position ``pos`` of the group's order) committed through block
+        ``depth``."""
+        self.store.append({
+            "kind": "checkpoint",
+            "group_id": int(group_id),
+            "pos": int(pos),
+            "task": int(task),
+            "depth": int(depth),
+            "node": _encode_node(node),
+            "value": _as_host(value),
+            "act_shape": (
+                None if act_shape is None else [int(s) for s in act_shape]
+            ),
+        })
+
+    def group_commit(
+        self,
+        group_id: int,
+        seqs: Sequence[int],
+        outputs: Sequence[Dict[int, Any]],
+        residency: Sequence[Optional[NodeId]],
+        stats: ExecutionStats,
+    ) -> None:
+        """Atomically commit one executed group.
+
+        ``outputs`` is per-slot (one dict per valid member, aligned with
+        ``seqs``); ``residency`` the executor's post-group residency (the
+        journaled residency *transition*); ``stats`` the group's executed
+        counters.  One appended record = one atomic commit: either recovery
+        sees the whole group (and never re-runs it) or none of it (and
+        re-runs it in full).
+        """
+        self.store.append({
+            "kind": "group_commit",
+            "group_id": int(group_id),
+            "seqs": [int(s) for s in seqs],
+            "outputs": [
+                [[int(t), _as_host(v)] for t, v in sorted(slot.items())]
+                for slot in outputs
+            ],
+            "residency": [_encode_node(n) for n in residency],
+            "stats": dataclasses.asdict(stats),
+        })
+
+    # --------------------------------------------------------------- reads
+    def replay(self) -> "JournalState":
+        """Fold the record stream into recovered state, idempotently.
+
+        Pure with respect to the store (no writes); tolerant of duplicate
+        records — the first ``group_commit`` per group wins, later ones are
+        ignored, and an ``admit`` for an already-admitted seq is a no-op.
+        """
+        admitted: Dict[int, Dict[str, Any]] = {}
+        terminal: Set[int] = set()
+        responses: Dict[int, Dict[str, Any]] = {}
+        committed: Set[int] = set()
+        residency: Optional[List[Optional[NodeId]]] = None
+        open_groups: Dict[int, Dict[str, Any]] = {}
+        checkpoints: Dict[int, Dict[str, Any]] = {}
+        next_group_id = 0
+        for rec in self.store.records():
+            kind = rec.get("kind")
+            if kind == "admit":
+                admitted.setdefault(int(rec["seq"]), rec)
+            elif kind == "request_failed":
+                terminal.add(int(rec["seq"]))
+            elif kind == "group_begin":
+                gid = int(rec["group_id"])
+                next_group_id = max(next_group_id, gid + 1)
+                if gid not in committed:
+                    open_groups[gid] = rec
+            elif kind == "checkpoint":
+                gid = int(rec["group_id"])
+                if gid not in committed:
+                    checkpoints[gid] = rec
+            elif kind == "group_commit":
+                gid = int(rec["group_id"])
+                next_group_id = max(next_group_id, gid + 1)
+                if gid in committed:
+                    continue  # duplicate commit: exactly-once, first wins
+                committed.add(gid)
+                open_groups.pop(gid, None)
+                checkpoints.pop(gid, None)
+                residency = [_decode_node(n) for n in rec["residency"]]
+                stats = ExecutionStats(**rec["stats"])
+                for slot, seq in enumerate(rec["seqs"]):
+                    seq = int(seq)
+                    terminal.add(seq)
+                    responses.setdefault(seq, {
+                        "group_id": gid,
+                        "outputs": {
+                            int(t): v for t, v in rec["outputs"][slot]
+                        },
+                        "stats": stats,
+                        "group_size": len(rec["seqs"]),
+                    })
+            else:
+                raise ValueError(f"unknown journal record kind {kind!r}")
+        # The in-flight group: the *latest* begun-but-uncommitted group.
+        # (At most one can genuinely be in flight — the session journals
+        # begin/commit strictly around each group's execution.)
+        inflight: Optional[Dict[str, Any]] = None
+        if open_groups:
+            gid = max(open_groups)
+            inflight = open_groups[gid]
+        checkpoint = (
+            checkpoints.get(int(inflight["group_id"])) if inflight else None
+        )
+        return JournalState(
+            admitted=admitted,
+            terminal=terminal,
+            responses=responses,
+            residency=residency,
+            inflight=inflight,
+            checkpoint=checkpoint,
+            next_group_id=next_group_id,
+        )
+
+
+@dataclasses.dataclass
+class JournalState:
+    """What :meth:`Journal.replay` recovers from the record stream.
+
+    ``pending_seqs`` is the derived admission backlog: admitted requests
+    with no durable terminal outcome, in admission order — exactly what a
+    recovering session must re-enqueue.
+    """
+
+    admitted: Dict[int, Dict[str, Any]]
+    terminal: Set[int]
+    responses: Dict[int, Dict[str, Any]]
+    residency: Optional[List[Optional[NodeId]]]
+    inflight: Optional[Dict[str, Any]]
+    checkpoint: Optional[Dict[str, Any]]
+    next_group_id: int
+
+    @property
+    def pending_seqs(self) -> List[int]:
+        return [s for s in sorted(self.admitted) if s not in self.terminal]
+
+    def checkpoint_node(self) -> Optional[NodeId]:
+        if self.checkpoint is None:
+            return None
+        return _decode_node(self.checkpoint["node"])

@@ -42,6 +42,10 @@ __all__ = [
     "FaultInjector",
     "TenantStats",
     "FAULT_SITES",
+    "PowerFailure",
+    "PowerFailureInjector",
+    "POWER_SITES",
+    "EnergyBudget",
 ]
 
 
@@ -282,3 +286,217 @@ class TenantStats:
     def max_admission_wait(self) -> float:
         """Max admission latency over this tenant's admitted requests."""
         return self.wait_max
+
+
+# --------------------------------------------------------------------------
+# Intermittent power (batteryless / energy-harvesting deployments)
+# --------------------------------------------------------------------------
+
+#: The boundaries a :class:`PowerFailureInjector` can kill the session at.
+#:
+#: * ``"group"`` — inside ``MultitaskEngine._run_group``, before a task's
+#:   batched dispatch (mid-group, between tasks);
+#: * ``"suffix"`` — at a segmented suffix's block-depth commit point, right
+#:   after the checkpoint hook journaled the activation (mid-suffix,
+#:   between blocks);
+#: * ``"prefetch"`` — entry of ``MultitaskEngine.prefetch_group``
+#:   (mid-prefetch, with a stream staged but uncommitted).
+POWER_SITES = ("group", "suffix", "prefetch")
+
+
+class PowerFailure(BaseException):
+    """The whole session lost power.
+
+    Deliberately **not** an :class:`Exception`: the session's per-group
+    rollback/retry/degradation machinery catches ``Exception``, and a power
+    failure must never be "recovered" in-process — it kills everything and
+    propagates to the harness, which reboots by building a fresh session
+    with :meth:`~repro.serving.session.ServingSession.recover` over the
+    durable journal.  (``KeyboardInterrupt`` uses the same idiom for the
+    same reason.)
+    """
+
+    def __init__(self, site: str, index: int, context: Dict[str, Any]):
+        super().__init__(f"power failure at {site!r} (invocation {index})")
+        self.site = site
+        self.index = index
+        self.context = dict(context)
+
+
+class PowerFailureInjector:
+    """Deterministic seeded whole-session power-failure injection.
+
+    The intermittent-computing sibling of :class:`FaultInjector`: same two
+    triggering modes (per-site Bernoulli ``rates`` from a seeded generator,
+    and per-site ``script`` sets of invocation indices that always fire),
+    same per-site :attr:`invocations` / :attr:`injected` counters, same
+    ``max_failures`` cap — but it raises :class:`PowerFailure` (a
+    ``BaseException``), so the session's group-isolation machinery never
+    absorbs it.  The injector itself lives *outside* the session (like the
+    FRAM journal), so the same instance keeps its schedule across reboots —
+    that is what makes "~20 failures over this trace" reproducible.
+    """
+
+    def __init__(
+        self,
+        rates: Optional[Mapping[str, float]] = None,
+        seed: int = 0,
+        script: Optional[Mapping[str, Iterable[int]]] = None,
+        max_failures: Optional[int] = None,
+    ):
+        self.rates = {k: float(v) for k, v in (rates or {}).items()}
+        for site, rate in self.rates.items():
+            if site not in POWER_SITES:
+                raise ValueError(
+                    f"unknown power site {site!r}; expected one of {POWER_SITES}"
+                )
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"rate for {site!r} must be in [0, 1], got {rate}")
+        self.script = {
+            site: frozenset(int(i) for i in idxs)
+            for site, idxs in (script or {}).items()
+        }
+        for site in self.script:
+            if site not in POWER_SITES:
+                raise ValueError(
+                    f"unknown power site {site!r}; expected one of {POWER_SITES}"
+                )
+        self._rng = np.random.default_rng(seed)
+        self.max_failures = max_failures
+        self.invocations: Dict[str, int] = {s: 0 for s in POWER_SITES}
+        self.injected: Dict[str, int] = {s: 0 for s in POWER_SITES}
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def check(self, site: str, **context: Any) -> None:
+        """Raise :class:`PowerFailure` if this invocation is scheduled to
+        lose power; otherwise return."""
+        index = self.invocations[site]
+        self.invocations[site] = index + 1
+        fire = index in self.script.get(site, frozenset())
+        rate = self.rates.get(site, 0.0)
+        if not fire and rate > 0.0:
+            # Draw even when capped so the schedule beyond the cap matches
+            # what an uncapped run would have produced.
+            fire = bool(self._rng.random() < rate)
+        if not fire:
+            return
+        if (
+            self.max_failures is not None
+            and self.total_injected >= self.max_failures
+        ):
+            return
+        self.injected[site] += 1
+        raise PowerFailure(site, index, context)
+
+
+class EnergyBudget:
+    """Duty-cycled energy store: a harvester charging a storage capacitor.
+
+    The session treats this as the paper's batteryless power supply: before
+    a group executes, its modelled energy (the cost model's prediction
+    through ``hw.energy_joules``, checkpoint writes included) must fit in
+    :attr:`available` — otherwise the pump *pauses*, sleeping exactly the
+    harvest time the deficit needs (``seconds_until``) before draining and
+    proceeding.  All host-side bookkeeping on the session's clock; nothing
+    here touches device execution.
+
+    Attributes:
+      capacity_joules: storage capacitance ceiling (harvest beyond it is
+        spilled, as a real capacitor would).
+      harvest_watts: harvest rate in J/s while paused or between groups.
+      available: joules currently stored.
+      drained_joules / harvested_joules / spilled_joules: lifetime totals.
+    """
+
+    def __init__(
+        self,
+        capacity_joules: float,
+        harvest_watts: float,
+        initial_joules: Optional[float] = None,
+    ):
+        if capacity_joules <= 0.0:
+            raise ValueError(
+                f"capacity_joules must be > 0, got {capacity_joules}"
+            )
+        if harvest_watts < 0.0:
+            raise ValueError(
+                f"harvest_watts must be >= 0, got {harvest_watts}"
+            )
+        self.capacity_joules = float(capacity_joules)
+        self.harvest_watts = float(harvest_watts)
+        self.available = (
+            self.capacity_joules if initial_joules is None
+            else min(float(initial_joules), self.capacity_joules)
+        )
+        if self.available < 0.0:
+            raise ValueError(f"initial_joules must be >= 0, got {initial_joules}")
+        self._last_harvest: Optional[float] = None
+        self.drained_joules = 0.0
+        self.harvested_joules = 0.0
+        self.spilled_joules = 0.0
+
+    def harvest(self, now: float) -> None:
+        """Accrue harvest up to ``now`` (session-clock seconds), clamped to
+        capacity.  The first call only anchors the clock."""
+        if self._last_harvest is not None and now > self._last_harvest:
+            gained = (now - self._last_harvest) * self.harvest_watts
+            fits = min(gained, self.capacity_joules - self.available)
+            self.available += fits
+            self.harvested_joules += fits
+            self.spilled_joules += gained - fits
+        self._last_harvest = max(
+            now,
+            self._last_harvest if self._last_harvest is not None else now,
+        )
+
+    def advance(self, seconds: float) -> None:
+        """Accrue exactly ``seconds`` of harvest, moving the anchor with it.
+
+        The session's pause path uses this instead of :meth:`harvest`: it
+        sleeps precisely ``seconds_until(need)`` and credits precisely that
+        much harvest, so the pause is deterministic regardless of how the
+        injected sleep hook relates to the session clock (a real
+        ``time.sleep`` and a simulated-clock no-op behave identically).
+        The anchor advances too, so a later ``harvest(now)`` on a clock the
+        sleep also advanced does not double-count the paused interval.
+        """
+        if seconds < 0.0:
+            raise ValueError(f"cannot advance {seconds} s")
+        gained = seconds * self.harvest_watts
+        fits = min(gained, self.capacity_joules - self.available)
+        self.available += fits
+        self.harvested_joules += fits
+        self.spilled_joules += gained - fits
+        if self._last_harvest is not None:
+            self._last_harvest += seconds
+
+    def can_spend(self, joules: float) -> bool:
+        return joules <= self.available
+
+    def seconds_until(self, joules: float) -> float:
+        """Harvest seconds until ``joules`` are available (0 if they are).
+
+        ``inf`` when the deficit can never be harvested — the caller should
+        fail loudly rather than sleep forever.
+        """
+        deficit = joules - self.available
+        if deficit <= 0.0:
+            return 0.0
+        if joules > self.capacity_joules or self.harvest_watts <= 0.0:
+            return float("inf")
+        return deficit / self.harvest_watts
+
+    def drain(self, joules: float) -> None:
+        """Spend ``joules``; callers must have checked :meth:`can_spend`."""
+        if joules < 0.0:
+            raise ValueError(f"cannot drain {joules} J")
+        if joules > self.available + 1e-12:
+            raise ValueError(
+                f"drain of {joules:.6g} J exceeds available "
+                f"{self.available:.6g} J — pause and harvest first"
+            )
+        self.available = max(self.available - joules, 0.0)
+        self.drained_joules += joules

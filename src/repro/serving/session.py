@@ -64,6 +64,25 @@ fault boundary of the serving stack, and its unit of failure is the
   request's ``seq``, task subset, tenant, and group id, the original
   traceback chained — and the pump moves on to the next group.
 
+* **Intermittent power** — a session opened with a ``journal``
+  (:class:`~repro.serving.journal.Journal`) writes ahead of every state
+  transition: requests at admission, ``group_begin`` before a group
+  executes, cost-model-placed mid-suffix activation checkpoints at
+  segment boundaries, and an atomic ``group_commit`` (outputs + counters
+  + residency) after.  A whole-process power failure
+  (:class:`~repro.serving.reliability.PowerFailure` — a ``BaseException``
+  the retry ladder never absorbs) leaves the journal as the only truth;
+  :meth:`ServingSession.recover` rebuilds a fresh session from it with
+  exactly-once response semantics: committed groups are never re-run
+  (their responses are rebuilt from the journal), the interrupted group
+  resumes from its last durable checkpoint (``use_checkpoints=False``
+  restarts it from scratch instead — the benchmark's comparator arm), and
+  everything still pending is re-enqueued.  An ``energy`` budget
+  (:class:`~repro.serving.reliability.EnergyBudget`) duty-cycles the pump:
+  a group only executes once its predicted joules (checkpoint writes
+  included) fit the storage capacitor, else the pump sleeps exactly the
+  harvest time the deficit needs.
+
 Driving the loop: callers either poll :meth:`step` on their own cadence
 (arrival-driven serving — the admission benchmark does this on a simulated
 Poisson trace), call :meth:`flush` to force one admit-everything pass, or
@@ -89,7 +108,9 @@ if TYPE_CHECKING:
     from repro.serving.engine import (
         GroupExecution, MultitaskEngine, MultitaskRequest, MultitaskResponse,
     )
+    from repro.serving.journal import Journal, JournalState
     from repro.serving.policies import SchedulingPolicy
+    from repro.serving.reliability import EnergyBudget
 
 
 class MultitaskFuture:
@@ -291,6 +312,9 @@ class ServingSession:
         retry: Optional[RetryPolicy] = None,
         sleep: Optional[Callable[[float], None]] = None,
         streaming: Optional[bool] = None,
+        journal: Optional["Journal"] = None,
+        checkpointing: bool = True,
+        energy: Optional["EnergyBudget"] = None,
     ):
         if overload not in ("reject", "shed"):
             raise ValueError(
@@ -320,6 +344,32 @@ class ServingSession:
                 "streaming sessions require a warm-start engine: a cold "
                 "reset before every group cancels any staged prefetch"
             )
+        # Intermittent-power serving (see repro.serving.journal): a write-
+        # ahead journal makes the session power-failure-atomic, an energy
+        # budget duty-cycles the pump.  ``checkpointing=False`` keeps the
+        # journal's exactly-once semantics but never cuts a suffix — the
+        # restart-from-scratch comparator the intermittent benchmark runs.
+        self.journal = journal
+        self.checkpointing = bool(checkpointing)
+        self.energy = energy
+        if journal is not None:
+            if engine.mesh is not None:
+                raise ValueError(
+                    "journaled (intermittent) sessions are not supported on "
+                    "mesh-sharded engines: segmented suffix dispatch would "
+                    "split the fused programs the per-suffix HLO collective "
+                    "calibration was computed for, breaking counter "
+                    "exactness — run intermittent serving on a single-device "
+                    "engine"
+                )
+            if not engine.warm_start:
+                raise ValueError(
+                    "journaled (intermittent) sessions require a warm-start "
+                    "engine: the journal's residency records model weights "
+                    "living in the durable tier across power cycles, which "
+                    "is exactly what warm_start keeps — a cold engine would "
+                    "discard the recovered residency before every group"
+                )
         # The overlap window the next prefetch may hide behind: the modelled
         # compute seconds of the last successfully executed group (zero at
         # session start and after any group failure — synchronous recovery).
@@ -346,7 +396,16 @@ class ServingSession:
         self.prefetch_scheduled_bytes = 0.0
         self.prefetch_failures = 0      # prefetches that raised (degraded
                                         # to synchronous loads, never fatal)
+        # Last prefetch failure's exception, kept for diagnosis (the
+        # prefetch path swallows errors by design — counters alone cannot
+        # say *why* streaming degraded to synchronous loads).
+        self.last_prefetch_error: Optional[BaseException] = None
+        self.energy_pauses = 0          # groups that waited for harvest
+        self.energy_paused_seconds = 0.0
         self._group_seq = 0             # session-unique execution-group ids
+        # seq -> future for every request recovered from a journal (filled
+        # by ``ServingSession.recover``; empty for ordinary sessions).
+        self.recovered: Dict[int, MultitaskFuture] = {}
         # Admission-latency tracking: running aggregates over every admitted
         # request (exact for the session's whole lifetime) plus a bounded
         # window of recent samples — a long-lived session must not grow a
@@ -419,6 +478,16 @@ class ServingSession:
         tstats = self.tenant_stats(entry.tenant)
         tstats.submitted += 1
         if self._admit_to_queue(entry):
+            # Write-ahead: the request is durable the moment it is queued,
+            # so a power failure never loses an acknowledged request.
+            # (Rejected/shed-on-arrival submissions fail their future
+            # immediately and are never journaled — nothing to recover.)
+            if self.journal is not None:
+                self.journal.admit(
+                    entry.seq, request.x, request.tasks,
+                    deadline=request.deadline, priority=request.priority,
+                    tenant=request.tenant,
+                )
             self.queue.push(entry)
         return fut
 
@@ -470,6 +539,8 @@ class ServingSession:
             shed=True, seq=victim.seq, tasks=victim.subset,
             tenant=victim.tenant,
         ))
+        if self.journal is not None:
+            self.journal.request_failed(victim.seq)
         return True
 
     def _reject(self, entry: PendingRequest, scope: str) -> None:
@@ -539,6 +610,8 @@ class ServingSession:
                 f"({e.request.deadline:.6g}) at t={now:.6g} before planning",
                 seq=e.seq, tasks=e.subset, tenant=e.tenant,
             ))
+            if self.journal is not None:
+                self.journal.request_failed(e.seq)
 
     def _record_wait(self, entry: PendingRequest, now: float) -> None:
         wait = now - entry.arrival
@@ -583,6 +656,21 @@ class ServingSession:
                 group_id = self._group_seq
                 self._group_seq += 1
                 members = tuple(admitted[slot] for slot in group.indices)
+                if self.journal is not None:
+                    # Write-ahead: membership, order, and identity of the
+                    # group are durable before anything executes, so a
+                    # crash anywhere inside it leaves an *open* group the
+                    # recovery can resume (or re-run) exactly once.
+                    self.journal.group_begin(
+                        group_id, [p.seq for p in members],
+                        self.engine.group_order(group), group.valid,
+                    )
+                if self.energy is not None and not self._energy_gate(
+                        group, members, group_id, now):
+                    # Infeasible forever (needs more than the capacitor
+                    # holds): members failed, pump moves on.
+                    self._stream_budget = 0.0
+                    continue
                 if self.streaming and self._stream_budget > 0.0:
                     # Pipeline overlap: the previous group's dispatches are
                     # still executing asynchronously on the device; stream
@@ -601,8 +689,25 @@ class ServingSession:
                     self._stream_budget = execution.predicted.compute_seconds(
                         self.engine.hw
                     )
+                if self.energy is not None:
+                    # Spend what the group actually cost (gated groups can
+                    # undershoot the all-gates-fire reservation; clamp keeps
+                    # rounding at the reservation boundary benign).
+                    spent = execution.stats.energy(self.engine.hw)
+                    self.energy.drain(min(spent, self.energy.available))
                 self.stats = self.stats.merge(execution.stats)
                 self.predicted = self.predicted.merge(execution.predicted)
+                if self.journal is not None:
+                    # Atomic commit: outputs + counters + the residency the
+                    # group leaves behind, in one durable record.  Futures
+                    # resolve only after this point, so a delivered response
+                    # is always a journaled response — exactly-once.
+                    self.journal.group_commit(
+                        group_id, [p.seq for p in members],
+                        execution.outputs,
+                        self.engine.executor.residency_state(),
+                        execution.stats,
+                    )
                 # Resolve immediately: building responses is non-blocking
                 # host work (outputs are unsynced JAX arrays, the modelled
                 # seconds come from counters), so deferring resolution
@@ -611,6 +716,64 @@ class ServingSession:
                 completed.extend(self._resolve(
                     execution, members, retries=retries, degraded=degraded))
         return completed
+
+    # --------------------------------------------------- energy budgeting
+    def _group_required_joules(self, group) -> float:
+        """The joules executing ``group`` from the executor's *current*
+        residency will cost (checkpoint writes included) — the reservation
+        the energy gate holds against the storage capacitor."""
+        engine = self.engine
+        eff = engine.group_order(group)
+        resume = (
+            engine.executor.residency_state() if engine.warm_start else None
+        )
+        plan = None
+        if self.journal is not None and self.checkpointing:
+            plan = engine.cost_model.plan_checkpoints(
+                eff, batch_size=group.valid
+            )
+        pred = engine.cost_model.predicted_stats(
+            eff, batch_size=group.valid, resume=resume, checkpoints=plan
+        )
+        return pred.energy(engine.hw)
+
+    def _energy_gate(
+        self,
+        group,
+        members: Tuple[PendingRequest, ...],
+        group_id: int,
+        now: float,
+    ) -> bool:
+        """Duty-cycle the pump: wait for harvest until ``group`` fits.
+
+        Returns True when the group may execute.  When the group's
+        predicted joules exceed the storage capacity outright (no amount of
+        harvesting ever suffices), its members fail — isolated to the
+        group, exactly like an exhausted retry ladder — and False comes
+        back.  Otherwise the pump sleeps precisely the deficit's harvest
+        time (``EnergyBudget.seconds_until``) and credits precisely that
+        harvest (``EnergyBudget.advance``), so paused executions are
+        deterministic under both real and simulated clocks.
+        """
+        budget = self.energy
+        budget.harvest(now)
+        need = self._group_required_joules(group)
+        wait = budget.seconds_until(need)
+        if wait == float("inf"):
+            self.groups_failed += 1
+            self._fail_batch(members, RuntimeError(
+                f"group {group_id} needs {need:.6g} J but the energy "
+                f"budget can never supply it (capacity "
+                f"{budget.capacity_joules:.6g} J, harvest "
+                f"{budget.harvest_watts:.6g} W)"
+            ), group_id=group_id)
+            return False
+        if wait > 0.0:
+            self.energy_pauses += 1
+            self.energy_paused_seconds += wait
+            self._sleep(wait)
+            budget.advance(wait)
+        return True
 
     # ------------------------------------------------- weight streaming
     def _prefetch(self, group) -> None:
@@ -628,8 +791,12 @@ class ServingSession:
             scheduled = self.engine.prefetch_group(
                 group, overlap_seconds=budget
             )
-        except Exception:
+        except Exception as err:
             self.prefetch_failures += 1
+            # Retain the swallowed failure (type + chained traceback) so
+            # operators can see *why* streaming degraded — the counter
+            # alone cannot distinguish an injected fault from a real one.
+            self.last_prefetch_error = err
             self.engine.executor.streamer.cancel()
             return
         if scheduled > 0.0:
@@ -666,7 +833,7 @@ class ServingSession:
                     self.backoff_seconds += pause
                     self._sleep(pause)
             try:
-                return self._attempt_group(group), failures, None
+                return self._attempt_group(group, group_id), failures, None
             except Exception as err:
                 failures += 1
                 last_err = err
@@ -674,10 +841,12 @@ class ServingSession:
             if self.engine.mesh is None and self.engine.executor.fused:
                 # Rung: unrolled per-block reference dispatch on the primary
                 # executor — identical counters, identical outputs, no fused
-                # program in the failure path.
+                # program in the failure path.  (A journaled session keeps
+                # journaling here: the per-block path fires the checkpoint
+                # hooks at the same depth boundaries as the segmented one.)
                 self.engine.executor.fused = False
                 try:
-                    execution = self._attempt_group(group)
+                    execution = self._attempt_group(group, group_id)
                     self.degraded_runs += 1
                     return execution, failures, "unfused"
                 except Exception as err:
@@ -701,17 +870,30 @@ class ServingSession:
         self._fail_batch(members, last_err, group_id=group_id)
         return None, failures, None
 
-    def _attempt_group(self, group) -> "GroupExecution":
+    def _attempt_group(
+        self, group, group_id: Optional[int] = None
+    ) -> "GroupExecution":
         """One execution attempt with crash-consistent rollback.
 
         The residency snapshot taken here is the state every cost
         prediction after this group will be computed from if the attempt
         fails — restoring it on *any* exception is what makes a mid-group
-        crash invisible to the counter-exactness invariant.
+        crash invisible to the counter-exactness invariant.  (A
+        :class:`~repro.serving.reliability.PowerFailure` also passes
+        through the rollback, harmlessly: the dying process's executor
+        state is irrelevant — recovery re-seeds it from the journal.)
         """
+        intermittent = None
+        if self.journal is not None and group_id is not None:
+            from repro.serving.engine import IntermittentContext
+
+            intermittent = IntermittentContext(
+                journal=self.journal, group_id=group_id,
+                checkpointing=self.checkpointing,
+            )
         snapshot = self.engine.executor.residency_state()
         try:
-            return self.engine._execute_group(group)
+            return self.engine._execute_group(group, intermittent=intermittent)
         except BaseException:
             self.engine.executor.set_residency(snapshot)
             raise
@@ -738,6 +920,10 @@ class ServingSession:
             )
             wrapped.__cause__ = err  # chain the original traceback
             p.future._fail(wrapped)
+            if self.journal is not None:
+                # Durable terminal outcome: recovery must not resurrect a
+                # request whose failure was already delivered.
+                self.journal.request_failed(p.seq)
 
     def _resolve(
         self,
@@ -753,3 +939,226 @@ class ServingSession:
             response.degraded = degraded
             entry.future._set(response)
         return responses
+
+    # ------------------------------------------------ power-failure recovery
+    @classmethod
+    def recover(
+        cls,
+        journal: "Journal",
+        engine: "MultitaskEngine",
+        use_checkpoints: bool = True,
+        now: Optional[float] = None,
+        **kwargs,
+    ) -> "ServingSession":
+        """Rebuild a session from a durable journal after a power failure.
+
+        The journal (FRAM) is the only survivor of the crash; everything
+        session-shaped (SRAM) is reconstructed from its replay:
+
+        * **committed groups** are never re-run — their members' futures
+          come back already resolved, rebuilt from the journaled outputs
+          and counters (``MultitaskResponse.recovered`` is set).  Replay
+          keeps the *first* commit per group, so even a journal containing
+          a previous recovery's duplicate records stays exactly-once.
+        * **the interrupted group** (begun, never committed) is resumed
+          immediately under its original group id: residency is restored
+          from the last committed transition, and with ``use_checkpoints``
+          the journaled mid-suffix activation checkpoint seeds the
+          executor, the group's order is rotated so the checkpointed task
+          runs first, and its suffix resumes from the checkpoint depth —
+          not from block 0.  ``use_checkpoints=False`` (the benchmark's
+          restart-from-scratch arm) re-runs it cold instead.
+        * **pending requests** (admitted, no durable outcome) are
+          re-enqueued under their original seqs with fresh futures.
+
+        Returns the new session; :attr:`recovered` maps every surviving
+        seq to its future (resolved for committed work, pending for the
+        re-enqueued backlog — drive :meth:`drain` to finish it).  Extra
+        keyword arguments forward to the constructor (clock, retry,
+        energy, …).  May itself die with a
+        :class:`~repro.serving.reliability.PowerFailure` if the injector
+        strikes during the resumed group — the journal stays consistent
+        and a later ``recover`` picks up from the newest checkpoint.
+        """
+        state = journal.replay()
+        kwargs.setdefault("checkpointing", use_checkpoints)
+        session = cls(engine, journal=journal, **kwargs)
+        t0 = session._now(now)
+        session._seq = max(state.admitted, default=-1) + 1
+        session._group_seq = state.next_group_id
+        # The durable residency transition: weights live in FRAM in the
+        # paper's deployment, so the last *committed* residency is what the
+        # rebooted executor wakes up with.  The scratch arm models a
+        # recovery that trusts nothing but the outputs.
+        if use_checkpoints and state.residency is not None:
+            engine.executor.set_residency(state.residency)
+        else:
+            engine.executor.reset()
+        for seq, rec in state.responses.items():
+            fut = MultitaskFuture(session, seq)
+            fut._set(session._rebuild_response(rec))
+            session.recovered[seq] = fut
+        pending = set(state.pending_seqs)
+        resumed: set = set()
+        if state.inflight is not None:
+            resumed = session._resume_inflight(state, use_checkpoints, pending)
+        for seq in state.pending_seqs:
+            if seq not in resumed:
+                session._reenqueue(state.admitted[seq], t0)
+        return session
+
+    def _rebuild_response(self, rec: Dict) -> "MultitaskResponse":
+        """A committed group's response, rebuilt from its journal record."""
+        from repro.serving.engine import MultitaskResponse
+
+        stats = dataclasses.replace(rec["stats"])
+        group_size = max(int(rec["group_size"]), 1)
+        per_req_seconds = stats.seconds(
+            self.engine.hw, weight_shards=self.engine.weight_shards
+        ) / group_size
+        return MultitaskResponse(
+            outputs=dict(rec["outputs"]),
+            stats=stats,
+            order=self.engine.order,
+            predicted_seconds=per_req_seconds,
+            group_size=int(rec["group_size"]),
+            recovered=True,
+        )
+
+    def _reenqueue(self, admit_rec: Dict, now: float) -> MultitaskFuture:
+        """Re-enqueue one journaled-but-unserved request under its original
+        seq.  Bypasses :meth:`submit` on purpose: the request is already
+        durable (re-journaling it would only bloat the log — replay
+        deduplicates admits anyway) and backpressure does not re-apply to
+        work the previous incarnation already accepted."""
+        from repro.serving.engine import MultitaskRequest
+
+        seq = int(admit_rec["seq"])
+        tasks = admit_rec["tasks"]
+        request = MultitaskRequest(
+            x=admit_rec["x"],
+            tasks=None if tasks is None else tuple(int(t) for t in tasks),
+            deadline=admit_rec["deadline"],
+            priority=int(admit_rec["priority"]),
+            tenant=admit_rec["tenant"],
+        )
+        fut = MultitaskFuture(self, seq)
+        self.queue.push(PendingRequest(
+            seq=seq, request=request, arrival=now, future=fut,
+            subset=self.engine.normalized_subset(request.tasks),
+        ))
+        self.requests_submitted += 1
+        self.recovered[seq] = fut
+        return fut
+
+    def _resume_inflight(
+        self,
+        state: "JournalState",
+        use_checkpoints: bool,
+        pending: set,
+    ) -> set:
+        """Resume (or re-run) the journal's interrupted group right now.
+
+        Reconstructs the group from its members' admit records, restores
+        the journaled activation checkpoint when ``use_checkpoints``, and
+        executes under the *original* group id so the commit closes the
+        open ``group_begin``.  Returns the member seqs it completed; an
+        empty set means the group could not be resumed in place (its
+        members simply re-enter the queue and get re-planned — correct,
+        just without mid-suffix credit).  Rotation is skipped for gated or
+        conditionally-constrained engines: gates read outputs-so-far, so
+        replaying a prefix-rotated order could change what fires.
+        """
+        from repro.core.executor import ActivationCheckpoint
+        from repro.serving.engine import IntermittentContext, MultitaskRequest
+
+        rec = state.inflight
+        gid = int(rec["group_id"])
+        member_seqs = [int(s) for s in rec["seqs"]]
+        if not member_seqs or any(s not in pending for s in member_seqs):
+            # Already terminal (the pre-crash ladder failed them) or
+            # nothing to do — replanning owns whatever is left.
+            return set()
+        admits = [state.admitted.get(s) for s in member_seqs]
+        if any(a is None for a in admits):
+            return set()
+        requests = []
+        for a in admits:
+            tasks = a["tasks"]
+            requests.append(MultitaskRequest(
+                x=a["x"],
+                tasks=None if tasks is None else tuple(int(t) for t in tasks),
+                deadline=a["deadline"],
+                priority=int(a["priority"]),
+                tenant=a["tenant"],
+            ))
+        groups = self.engine.plan_groups(requests)
+        if len(groups) != 1 or groups[0].valid != len(requests):
+            return set()  # cannot reconstruct the exact group; replan
+        group = groups[0]
+        order = tuple(int(t) for t in rec["order"])
+        first_task_resume = 0
+        if use_checkpoints and state.checkpoint is not None:
+            ck = state.checkpoint
+            # Rotate by the checkpoint's *task*, never its recorded ``pos``:
+            # pos is relative to the order of the boot that wrote it, and a
+            # previous recovery may already have rotated that order — after
+            # two crashes the same pos can name a different task, and the
+            # restored activation would seed the wrong path.
+            ck_task = int(ck["task"])
+            pos = order.index(ck_task) if ck_task in order else -1
+            rotated = order[pos:] + order[:pos]
+            rotation_safe = (
+                not self.engine.gates
+                and (self.engine.constraints is None
+                     or self.engine.constraints.is_valid_order(rotated))
+            )
+            if rotation_safe and 0 <= pos < len(order):
+                order = rotated
+                first_task_resume = int(ck["depth"]) + 1
+                self.engine.executor.restore_activation(ActivationCheckpoint(
+                    depth=int(ck["depth"]),
+                    node=state.checkpoint_node(),
+                    value=ck["value"],
+                    act_shape=(
+                        tuple(int(s) for s in ck["act_shape"])
+                        if ck["act_shape"] is not None else None
+                    ),
+                ))
+        group = dataclasses.replace(group, order=order)
+        ctx = IntermittentContext(
+            journal=self.journal, group_id=gid,
+            checkpointing=self.checkpointing,
+        )
+        try:
+            execution = self.engine._execute_group(
+                group, intermittent=ctx,
+                first_task_resume=first_task_resume,
+                keep_activations=first_task_resume > 0,
+            )
+        except Exception:
+            # Roll back to the journaled state and let ordinary planning
+            # re-run the members from scratch.  (PowerFailure is a
+            # BaseException and deliberately propagates.)
+            if use_checkpoints and state.residency is not None:
+                self.engine.executor.set_residency(state.residency)
+            else:
+                self.engine.executor.reset()
+            return set()
+        self.groups_executed += 1
+        self.stats = self.stats.merge(execution.stats)
+        self.predicted = self.predicted.merge(execution.predicted)
+        if self.energy is not None:
+            spent = execution.stats.energy(self.engine.hw)
+            self.energy.drain(min(spent, self.energy.available))
+        slot_seqs = [member_seqs[i] for i in group.indices]
+        self.journal.group_commit(
+            gid, slot_seqs, execution.outputs,
+            self.engine.executor.residency_state(), execution.stats,
+        )
+        responses = self.engine._group_responses(execution)
+        for seq, response in zip(slot_seqs, responses):
+            fut = MultitaskFuture(self, seq)
+            fut._set(response)
+            self.recovered[seq] = fut
+        return set(member_seqs)

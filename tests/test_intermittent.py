@@ -1,0 +1,513 @@
+"""Intermittent-power serving: durable journal, power-failure-atomic
+checkpoint/resume, and energy-budgeted execution.
+
+The contract under test extends tests/test_reliability.py's crash
+consistency through whole-process death:
+
+* the journal is a write-ahead log on a store that outlives the session
+  (FRAM): replay is an idempotent fold, the first commit per group wins,
+  and a journal containing duplicate records recovers identical state;
+* segmented fused-suffix execution is invisible to results — cutting a
+  suffix at checkpoint depths produces the same outputs and the same
+  counters as the uncut dispatch, plus one hook firing per cut;
+* a suffix interrupted at depth d resumes from d+1, not 0, via
+  ``activation_checkpoint()`` / ``restore_activation()``;
+* :meth:`ServingSession.recover` rebuilds a session with exactly-once
+  response semantics — committed groups never re-run, the interrupted
+  group resumes under its original id, outputs match the uninterrupted
+  run, and ``session.stats == session.predicted`` stays exact (checkpoint
+  terms included) across arbitrarily many rebooted recoveries;
+* the :class:`EnergyBudget` duty-cycles the pump deterministically and
+  isolates infeasible groups instead of wedging the session.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import BlockCost, GraphCostModel, MSP430, MultitaskProgram
+from repro.core.executor import TaskGraphExecutor
+from repro.core.task_graph import TaskGraph
+from repro.core.types import ExecutionStats
+from repro.serving import (
+    EnergyBudget, EnginePolicy, FileJournalStore, Journal, MemoryJournalStore,
+    MultitaskEngine, MultitaskRequest, PowerFailure, PowerFailureInjector,
+    RequestGroupScheduler, ServingSession,
+)
+
+DIM = 8
+GRAPH = TaskGraph.from_groups([
+    [[0, 1, 2, 3]], [[0, 1], [2, 3]], [[0], [1], [2, 3]],
+])
+
+
+def _program(seed=0, act_bytes=8.0):
+    rng = np.random.default_rng(seed)
+    costs = [
+        BlockCost(weight_bytes=100.0 * (d + 1), flops=1e4 * (d + 1),
+                  act_bytes=act_bytes)
+        for d in range(GRAPH.depth)
+    ]
+
+    def block(p, x):
+        return jnp.tanh(x @ p)
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(DIM, DIM)), jnp.float32)
+        for node in GRAPH.nodes()
+    }
+    heads = [lambda p, x: x @ p] * GRAPH.num_tasks
+    head_params = [jnp.asarray(rng.normal(size=(DIM, 3)), jnp.float32)
+                   for _ in range(GRAPH.num_tasks)]
+    return MultitaskProgram(
+        GRAPH, [block] * GRAPH.depth, node_params, heads, head_params, costs
+    )
+
+
+PROGRAM = _program()
+
+
+def _engine(prog=PROGRAM, **kw):
+    kw.setdefault("scheduler", RequestGroupScheduler(batch_shapes=(1, 2, 4)))
+    return MultitaskEngine(
+        prog, hw=MSP430, policy=EnginePolicy(warm_start=True), **kw
+    )
+
+
+def _requests(n=6, seed=1, tasks=None):
+    rng = np.random.default_rng(seed)
+    return [
+        MultitaskRequest(
+            x=jnp.asarray(rng.normal(size=(DIM,)), jnp.float32), tasks=tasks)
+        for _ in range(n)
+    ]
+
+
+def _baseline(reqs):
+    """Uninterrupted journaled serve: the reference outputs."""
+    engine = _engine()
+    session = ServingSession(engine, journal=Journal(MemoryJournalStore()))
+    futs = [session.submit(r) for r in reqs]
+    session.drain()
+    assert session.stats == session.predicted
+    return {f.seq: f.result().outputs for f in futs}
+
+
+def _assert_outputs_match(got, ref):
+    assert set(got) == set(ref)
+    for t in ref:
+        np.testing.assert_allclose(
+            np.asarray(got[t]), np.asarray(ref[t]), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Journal: replay idempotence, exactly-once, file-backed store
+# --------------------------------------------------------------------------
+
+def test_replay_is_idempotent_and_first_commit_wins():
+    store = MemoryJournalStore()
+    j = Journal(store)
+    x = np.ones(DIM, np.float32)
+    j.admit(0, x, None, deadline=None, priority=0, tenant=None)
+    j.admit(1, x, (0, 1), deadline=1.5, priority=2, tenant="acme")
+    j.admit(1, x, (0, 1), deadline=1.5, priority=2, tenant="acme")  # dup
+    j.group_begin(0, [0, 1], [0, 1], 2)
+    out = [{0: np.zeros(3, np.float32)}, {1: np.ones(3, np.float32)}]
+    j.group_commit(0, [0, 1], out, [None] * GRAPH.depth, ExecutionStats())
+    # Duplicate commit with DIFFERENT outputs: exactly-once means ignored.
+    j.group_commit(0, [0, 1], [{0: np.full(3, 9.0)}, {1: np.full(3, 9.0)}],
+                   [None] * GRAPH.depth, ExecutionStats())
+    a, b = j.replay(), j.replay()
+    assert set(a.admitted) == {0, 1}
+    assert a.admitted[1]["tenant"] == "acme"
+    assert a.inflight is None          # the commit closed the open group
+    assert set(a.responses) == {0, 1}
+    np.testing.assert_array_equal(a.responses[0]["outputs"][0],
+                                  np.zeros(3, np.float32))
+    assert set(b.responses) == set(a.responses)
+    assert b.pending_seqs == a.pending_seqs == []
+
+
+def test_replay_recovers_inflight_group_and_latest_checkpoint():
+    j = Journal(MemoryJournalStore())
+    x = np.ones(DIM, np.float32)
+    for s in range(3):
+        j.admit(s, x, None, deadline=None, priority=0, tenant=None)
+    j.group_begin(7, [0, 2], [2, 0], 2)
+    j.checkpoint(7, 0, 2, 0, GRAPH.path(2)[0], np.ones((2, DIM)), (2, DIM))
+    j.checkpoint(7, 0, 2, 1, GRAPH.path(2)[1], np.ones((2, DIM)), (2, DIM))
+    st = j.replay()
+    assert st.inflight["group_id"] == 7
+    assert [int(s) for s in st.inflight["seqs"]] == [0, 2]
+    assert st.checkpoint["depth"] == 1          # latest wins
+    assert st.checkpoint_node() == GRAPH.path(2)[1]
+    assert st.pending_seqs == [0, 1, 2]
+    assert st.next_group_id == 8
+
+
+def test_file_journal_store_roundtrip(tmp_path):
+    """The JSONL store survives process death: a fresh store over the same
+    path replays to identical state, arrays included."""
+    path = str(tmp_path / "journal.jsonl")
+    j = Journal(FileJournalStore(path))
+    x = np.arange(DIM, dtype=np.float32)
+    j.admit(0, x, (0, 2), deadline=2.5, priority=1, tenant="t0")
+    j.group_begin(0, [0], [0, 2], 1)
+    j.checkpoint(0, 0, 0, 1, GRAPH.path(0)[1],
+                 np.full((1, DIM), 0.25, np.float32), (1, DIM))
+    stats = ExecutionStats(flops_executed=12.0, checkpoint_bytes=8.0,
+                           checkpoint_seconds=1e-6)
+    j.group_commit(0, [0], [{0: np.full(3, 2.0, np.float32)}],
+                   [GRAPH.path(0)[0]] + [None] * (GRAPH.depth - 1), stats)
+
+    st = Journal(FileJournalStore(path)).replay()
+    np.testing.assert_allclose(st.admitted[0]["x"], x)
+    assert st.admitted[0]["deadline"] == 2.5
+    rec = st.responses[0]
+    assert rec["stats"] == stats
+    np.testing.assert_allclose(rec["outputs"][0], np.full(3, 2.0))
+    assert st.residency[0] == GRAPH.path(0)[0]
+    assert st.inflight is None
+
+
+# --------------------------------------------------------------------------
+# Executor: segmented suffixes, activation checkpoint/restore
+# --------------------------------------------------------------------------
+
+def test_segmented_suffix_matches_unsegmented():
+    xs = jnp.stack([r.x for r in _requests(2, seed=3)])
+    plain_ex = TaskGraphExecutor(PROGRAM)
+    seg_ex = TaskGraphExecutor(PROGRAM)
+    for task in range(GRAPH.num_tasks):
+        # Fresh activations each round so every suffix starts at depth 0 —
+        # a cut below the resume depth is already covered and never fires.
+        plain_ex.clear_activations()
+        seg_ex.clear_activations()
+        s_plain, s_seg = ExecutionStats(), ExecutionStats()
+        ref = plain_ex.run_task_batch(task, xs, s_plain)
+        fired = []
+        got = seg_ex.run_task_batch(
+            task, xs, s_seg, checkpoint_depths=(0, 1),
+            checkpoint_hook=fired.append,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+        assert s_plain == s_seg        # cuts never change the counters
+        assert fired == [0, 1]
+    # Depths at/after the last block are never cut (the group commit covers
+    # them) — the hook must not fire there.
+    seg_ex.reset()
+    fired = []
+    seg_ex.run_task_batch(0, xs, ExecutionStats(),
+                          checkpoint_depths=(GRAPH.depth - 1,),
+                          checkpoint_hook=fired.append)
+    assert fired == []
+
+
+def test_activation_checkpoint_restore_resumes_mid_path():
+    xs = jnp.stack([r.x for r in _requests(2, seed=4)])
+    ex = TaskGraphExecutor(PROGRAM)
+    ref = ex.run_task_batch(0, xs, ExecutionStats())
+    ck = ex.activation_checkpoint(0)
+    assert ck is not None and ck.depth == GRAPH.depth - 1
+    assert ck.node == GRAPH.path(0)[ck.depth]
+
+    # Model the reboot: SRAM gone, FRAM (residency + checkpoint) restored.
+    residency = ex.residency_state()
+    ex.reset()
+    ex.set_residency(residency)
+    ex.restore_activation(ck)
+    stats = ExecutionStats()
+    got = ex.run_task_batch(0, xs, stats)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # Resumed from ck.depth + 1: every block at or above is skipped.
+    assert stats.blocks_skipped == ck.depth + 1
+    assert stats.blocks_executed == GRAPH.depth - ck.depth - 1
+    assert stats.weight_bytes_loaded == 0.0     # residency survived
+
+
+def test_prediction_tracks_resume_and_activation_floor():
+    """``first_task_resume`` prediction matches execution exactly, including
+    the activation floor: after a mid-path restore, a successor task whose
+    shared prefix ends below the restore depth re-runs from 0 (the shared
+    activations were never computed this boot), and prediction must not
+    credit residency for depths execution never touched."""
+    xs = jnp.stack([r.x for r in _requests(2, seed=5)])
+    cm = GraphCostModel(GRAPH, PROGRAM.block_costs, MSP430)
+    ex = TaskGraphExecutor(PROGRAM)
+    order = [1, 2]      # shared_prefix_depth(1, 2) == 1 < restore depth
+    ex.run_task_batch(1, xs, ExecutionStats())
+    ck = ex.activation_checkpoint(1)
+    residency = ex.residency_state()
+    ex.reset()
+    ex.set_residency(residency)
+    ex.restore_activation(ck)
+    stats = ExecutionStats()
+    for t in order:
+        ex.run_task_batch(t, xs, stats, weight=2)
+    predicted = cm.predicted_stats(
+        order, batch_size=2, resume=residency,
+        first_task_resume=ck.depth + 1,
+    )
+    assert stats == predicted
+
+
+# --------------------------------------------------------------------------
+# Cost model: checkpoint placement
+# --------------------------------------------------------------------------
+
+def test_checkpoint_placement_follows_write_vs_reexec_rule():
+    cm = GraphCostModel(GRAPH, PROGRAM.block_costs, MSP430, metric="energy")
+    sites = cm.plan_checkpoints([2, 3], batch_size=2)
+    assert sites, "cheap activations + expensive blocks must checkpoint"
+    for s in sites:
+        assert 0 <= s.depth < GRAPH.depth - 1    # never after the last block
+        assert s.bytes == cm.checkpoint_bytes(s.depth, 2)
+        assert s.seconds == cm.checkpoint_write_seconds(s.depth, 2)
+    # Huge activations: writing durable state always costs more than any
+    # replay it could save, so the planner places nothing.
+    costly = GraphCostModel(
+        GRAPH,
+        [dataclasses.replace(bc, act_bytes=1e9) for bc in PROGRAM.block_costs],
+        MSP430, metric="energy",
+    )
+    assert costly.plan_checkpoints([2, 3], batch_size=2) == []
+
+
+def test_predicted_stats_accounts_planned_checkpoints():
+    cm = GraphCostModel(GRAPH, PROGRAM.block_costs, MSP430, metric="energy")
+    sites = cm.plan_checkpoints([0, 1], batch_size=2)
+    base = cm.predicted_stats([0, 1], batch_size=2)
+    with_ck = cm.predicted_stats([0, 1], batch_size=2, checkpoints=sites)
+    assert with_ck.checkpoint_bytes == sum(s.bytes for s in sites) > 0
+    assert with_ck.checkpoint_seconds == pytest.approx(
+        sum(s.seconds for s in sites))
+    assert base.checkpoint_bytes == 0.0
+    # Checkpoints add durable writes, never compute.
+    assert with_ck.flops_executed == base.flops_executed
+    assert with_ck.seconds(MSP430) > base.seconds(MSP430)
+    assert with_ck.energy(MSP430) > base.energy(MSP430)
+
+
+# --------------------------------------------------------------------------
+# Power-failure injection
+# --------------------------------------------------------------------------
+
+def test_power_injector_script_and_cap():
+    inj = PowerFailureInjector(script={"group": [1]}, max_failures=1)
+    inj.check("group")                       # invocation 0: survives
+    with pytest.raises(PowerFailure) as e:
+        inj.check("group", task=3)
+    assert e.value.site == "group" and e.value.index == 1
+    assert e.value.context["task"] == 3
+    assert not isinstance(e.value, Exception)  # must bypass retry machinery
+    inj.check("group")                       # cap reached: armed no more
+    assert inj.total_injected == 1
+
+
+def test_session_rejects_journal_with_mesh_or_cold_engine():
+    eng_cold = MultitaskEngine(
+        PROGRAM, hw=MSP430, policy=EnginePolicy(warm_start=False),
+        scheduler=RequestGroupScheduler(batch_shapes=(1, 2, 4)),
+    )
+    with pytest.raises(ValueError):
+        ServingSession(eng_cold, journal=Journal(MemoryJournalStore()))
+
+
+# --------------------------------------------------------------------------
+# Recovery: exactly-once, checkpoint resume, repeated reboots
+# --------------------------------------------------------------------------
+
+def test_recover_resumes_interrupted_group_exactly_once():
+    reqs = _requests(6, seed=1)
+    ref = _baseline(reqs)
+
+    engine = _engine()
+    store = MemoryJournalStore()
+    engine.power_injector = PowerFailureInjector(script={"suffix": [1]})
+    session = ServingSession(engine, journal=Journal(store))
+    for r in reqs:
+        session.submit(r)
+    with pytest.raises(PowerFailure):
+        session.drain()
+    mid = Journal(store).replay()
+    assert mid.inflight is not None and mid.checkpoint is not None
+    committed_before = set(mid.responses)
+
+    engine.power_injector = None
+    engine.executor.reset()                       # SRAM gone
+    recovered = ServingSession.recover(Journal(store), engine)
+    # Committed work comes back resolved without re-running.
+    for seq in committed_before:
+        fut = recovered.recovered[seq]
+        assert fut.done() and fut.result().recovered
+    recovered.drain()
+    assert recovered.stats == recovered.predicted  # incl. checkpoint terms
+    # The resumed group really resumed mid-suffix: it skipped flops at a
+    # depth the cold plan would have executed.
+    final = Journal(store).replay()
+    assert set(final.responses) == {f.seq for f in recovered.recovered.values()} \
+        == set(range(len(reqs)))
+    for seq, ref_out in ref.items():
+        _assert_outputs_match(final.responses[seq]["outputs"], ref_out)
+    # Exactly-once: one commit per group, one covering commit per seq.
+    commits = [r for r in store.records() if r["kind"] == "group_commit"]
+    gids = [r["group_id"] for r in commits]
+    assert len(gids) == len(set(gids))
+    covered = [s for r in commits for s in r["seqs"]]
+    assert len(covered) == len(set(covered))
+
+
+def test_recover_without_checkpoints_reruns_from_scratch():
+    reqs = _requests(6, seed=1)
+    ref = _baseline(reqs)
+    engine = _engine()
+    store = MemoryJournalStore()
+    engine.power_injector = PowerFailureInjector(script={"suffix": [1]})
+    session = ServingSession(engine, journal=Journal(store))
+    for r in reqs:
+        session.submit(r)
+    with pytest.raises(PowerFailure):
+        session.drain()
+    engine.power_injector = None
+    engine.executor.reset()
+    recovered = ServingSession.recover(
+        Journal(store), engine, use_checkpoints=False)
+    assert recovered.checkpointing is False       # scratch arm writes none
+    recovered.drain()
+    assert recovered.stats == recovered.predicted
+    assert recovered.stats.checkpoint_bytes == 0.0
+    final = Journal(store).replay()
+    assert set(final.responses) == set(range(len(reqs)))
+    for seq, ref_out in ref.items():
+        _assert_outputs_match(final.responses[seq]["outputs"], ref_out)
+
+
+def _reboot_soak(reqs, injector):
+    """Drive ``reqs`` to completion through ``injector``'s failure schedule,
+    rebooting (reset + recover) after every death — recoveries themselves may
+    die and are retried.  Returns (final session, store, reboot count)."""
+    ref = _baseline(reqs)
+    engine = _engine()
+    engine.power_injector = injector
+    store = MemoryJournalStore()
+    session = ServingSession(engine, journal=Journal(store))
+    for r in reqs:
+        session.submit(r)
+    reboots = 0
+    while True:
+        try:
+            session.drain()
+            break
+        except PowerFailure:
+            reboots += 1
+            assert session.stats == session.predicted   # exact at death
+            while True:
+                engine.executor.reset()
+                try:
+                    session = ServingSession.recover(Journal(store), engine)
+                    break
+                except PowerFailure:
+                    reboots += 1
+    assert injector.total_injected == reboots > 0
+    assert session.stats == session.predicted
+    final = Journal(store).replay()
+    assert set(final.responses) == set(range(len(reqs)))
+    for seq, ref_out in ref.items():
+        _assert_outputs_match(final.responses[seq]["outputs"], ref_out)
+    commits = [r for r in store.records() if r["kind"] == "group_commit"]
+    gids = [r["group_id"] for r in commits]
+    assert len(gids) == len(set(gids))
+    covered = [s for r in commits for s in r["seqs"]]
+    assert len(covered) == len(set(covered))
+    return session, store, reboots
+
+
+def test_repeated_reboots_stay_exact_and_exactly_once():
+    """Chaos reboots: a seeded failure schedule kills the session (and its
+    recoveries) many times over; regression cover for rotating the resumed
+    order by the checkpoint's *task* — a second crash inside a rotated
+    resume used to mis-seed the restored activation and break exactness."""
+    injector = PowerFailureInjector(
+        rates={"group": 0.4, "suffix": 0.4}, seed=17, max_failures=12)
+    _reboot_soak(_requests(10, seed=2), injector)
+
+
+@pytest.mark.slow
+def test_reboot_soak_long_trace():
+    """Nightly soak (cron ``pytest -m slow``): a longer trace under a denser
+    failure schedule — dozens of reboots, several of which interrupt an
+    in-progress recovery, must stay exact and exactly-once end to end."""
+    injector = PowerFailureInjector(
+        rates={"group": 0.35, "suffix": 0.35}, seed=23, max_failures=40)
+    _, _, reboots = _reboot_soak(_requests(40, seed=6), injector)
+    assert reboots >= 15
+
+
+# --------------------------------------------------------------------------
+# Energy budget
+# --------------------------------------------------------------------------
+
+def test_energy_budget_units():
+    b = EnergyBudget(capacity_joules=10.0, harvest_watts=2.0,
+                     initial_joules=1.0)
+    assert b.available == 1.0
+    b.harvest(0.0)                     # anchors only
+    b.harvest(2.0)                     # +4 J
+    assert b.available == pytest.approx(5.0)
+    assert b.seconds_until(5.0) == 0.0
+    assert b.seconds_until(9.0) == pytest.approx(2.0)
+    assert b.seconds_until(11.0) == float("inf")    # never fits
+    b.advance(10.0)                    # +20 J, clamps at capacity
+    assert b.available == pytest.approx(10.0)
+    assert b.spilled_joules == pytest.approx(15.0)
+    b.drain(4.0)
+    assert b.available == pytest.approx(6.0)
+    with pytest.raises(ValueError):
+        b.drain(100.0)
+    with pytest.raises(ValueError):
+        b.advance(-1.0)
+
+
+def test_energy_budget_duty_cycles_the_pump():
+    reqs = _requests(6, seed=1)
+    ref = _baseline(reqs)
+    engine = _engine()
+    budget = EnergyBudget(capacity_joules=1.0, harvest_watts=0.5,
+                          initial_joules=0.0)
+    session = ServingSession(
+        engine, journal=Journal(MemoryJournalStore()), energy=budget,
+        sleep=lambda s: None,
+    )
+    futs = [session.submit(r) for r in reqs]
+    session.drain()
+    assert session.energy_pauses > 0
+    assert session.energy_paused_seconds > 0.0
+    assert session.groups_failed == 0
+    assert session.stats == session.predicted
+    for f in futs:
+        _assert_outputs_match(f.result().outputs, ref[f.seq])
+
+
+def test_energy_budget_fails_infeasible_groups_isolated():
+    """A group that needs more than the capacitor can ever hold fails its
+    members (typed, isolated) instead of wedging the pump."""
+    reqs = _requests(2, seed=1, tasks=(0,))
+    engine = _engine()
+    budget = EnergyBudget(capacity_joules=1e-12, harvest_watts=1.0)
+    session = ServingSession(
+        engine, journal=Journal(MemoryJournalStore()), energy=budget,
+        sleep=lambda s: None,
+    )
+    futs = [session.submit(r) for r in reqs]
+    session.drain()
+    assert session.groups_failed >= 1
+    for f in futs:
+        assert f.done() and f.error() is not None
+    # The session is still usable if the capacitor is upgraded.
+    session.energy = EnergyBudget(capacity_joules=10.0, harvest_watts=10.0)
+    ok = session.submit(_requests(1, seed=9)[0])
+    session.drain()
+    assert ok.done() and ok.error() is None

@@ -22,15 +22,16 @@ Property tests run under hypothesis when installed and always under a
 fixed-seed randomized fallback.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import MSP430
 from repro.serving import (
-    AffinityPolicy, DeadlineExceeded, FaultInjector, GreedyBatchPolicy,
-    InjectedFault, MultitaskEngine, MultitaskRequest, QueueFull,
-    RequestError, RequestGroupScheduler, RetryPolicy, SloAwarePolicy,
-    TenantStats, WindowPolicy,
+    AffinityPolicy, DeadlineExceeded, EnginePolicy, FaultInjector,
+    GreedyBatchPolicy, InjectedFault, MultitaskEngine, MultitaskRequest,
+    QueueFull, RequestError, RequestGroupScheduler, RetryPolicy,
+    SloAwarePolicy, TenantStats, WindowPolicy,
 )
 from tests.test_session import DIM, PROGRAM, FakeClock, _requests
 
@@ -230,6 +231,99 @@ def test_degraded_unfused_run_matches_and_stays_exact():
         _assert_allclose_response(f.result(), r)
     assert session.degraded_runs == 1
     assert session.stats == session.predicted
+
+
+# --------------------------------------------------------------------------
+# Mesh degradation ladder: single-device fallback rung
+# --------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 (forced host) devices"
+)
+
+
+def _mesh_engine(**kwargs):
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.policy import TP_POLICY
+
+    return MultitaskEngine(PROGRAM, hw=MSP430, policy=EnginePolicy(
+        mesh=make_mesh((4, 2), ("data", "model")),
+        sharding=TP_POLICY,
+        scheduler=RequestGroupScheduler(batch_shapes=(1, 4)),
+    ), **kwargs)
+
+
+@needs_mesh
+def test_mesh_fallback_rung_serves_group_on_single_device():
+    """When every sharded attempt fails, the ladder's single_device rung
+    serves the group cold on the off-mesh fallback executor: outputs match
+    the fault-free reference, the counters stay exact (no collective bytes
+    — the fallback has no mesh), and the *primary* executor keeps its
+    rolled-back residency."""
+    rng = np.random.default_rng(31)
+    reqs = _requests(rng, [None, (1, 2)])
+    ref = _reference_outputs(reqs)
+    # Two primary attempts fault at dispatch; the third dispatch is the
+    # fallback rung, which must go through.
+    inj = FaultInjector(rates={"dispatch": 1.0}, max_faults=2, seed=9)
+    eng = _mesh_engine(fault_injector=inj)
+    session = eng.session(retry=RetryPolicy(max_retries=1, degrade=True))
+    pre = eng.executor.residency_state()
+    f0 = session.submit(reqs[0])
+    session.drain()
+    resp = f0.result()
+    assert resp.degraded == "single_device" and resp.retries == 2
+    _assert_allclose_response(resp, ref[0])
+    assert session.degraded_runs == 1
+    assert session.groups_failed == 0
+    assert session.stats == session.predicted
+    # The degraded group ran cold off-mesh: its counters carry no
+    # collective traffic and the sharded executor's residency is exactly
+    # the pre-attempt snapshot the rollback restored.
+    assert session.stats.collective_bytes == 0
+    assert eng.executor.residency_state() == pre
+    # Later groups go back to the sharded primary path.
+    f1 = session.submit(reqs[1])
+    session.drain()
+    resp1 = f1.result()
+    assert resp1.degraded is None
+    _assert_allclose_response(resp1, ref[1])
+    assert session.stats == session.predicted
+    assert session.stats.collective_bytes > 0
+
+
+@needs_mesh
+def test_mesh_fallback_failure_rolls_back_and_keeps_serving():
+    """If the fallback rung itself fails, the residency snapshot restore
+    runs, the members fail cleanly, and the session serves the next group
+    normally with exact counters."""
+    rng = np.random.default_rng(32)
+    reqs = _requests(rng, [None, (0, 3)])
+    ref = _reference_outputs(reqs)
+    # 3 faults: two primary attempts + the fallback rung for group 0 only.
+    inj = FaultInjector(rates={"dispatch": 1.0}, max_faults=3, seed=9)
+    eng = _mesh_engine(fault_injector=inj)
+    session = eng.session(retry=RetryPolicy(max_retries=1, degrade=True))
+    pre = eng.executor.residency_state()
+    f0 = session.submit(reqs[0])
+    session.drain()
+    with pytest.raises(RequestError) as exc_info:
+        f0.result()
+    assert isinstance(exc_info.value.__cause__, InjectedFault)
+    assert session.groups_failed == 1
+    assert session.degraded_runs == 0
+    # Ladder exhausted without merging anything: counters untouched and
+    # the sharded executor rolled back to its pre-group residency.
+    assert session.stats == session.predicted
+    assert eng.executor.residency_state() == pre
+    # The session is still fully usable on the mesh path afterwards.
+    f1 = session.submit(reqs[1])
+    session.drain()
+    resp = f1.result()
+    assert resp.degraded is None
+    _assert_allclose_response(resp, ref[1])
+    assert session.stats == session.predicted
+    assert session.stats.collective_bytes > 0
 
 
 # --------------------------------------------------------------------------

@@ -20,8 +20,8 @@ from repro.core import (
 from repro.core.task_graph import TaskGraph
 from repro.core.types import ExecutionStats
 from repro.serving import (
-    EnginePolicy, FaultInjector, MultitaskEngine, MultitaskRequest,
-    RequestGroupScheduler, RetryPolicy,
+    EnginePolicy, FaultInjector, InjectedFault, MultitaskEngine,
+    MultitaskRequest, RequestGroupScheduler, RetryPolicy,
 )
 
 DIM = 8
@@ -458,6 +458,10 @@ def test_prefetch_fault_degrades_to_synchronous_loads():
         prog, reqs, streaming=True, fault_injector=injector)
     assert injector.injected["prefetch"] == 2
     assert session.prefetch_failures == 2
+    # The last swallowed error is retained for operators (the counter says
+    # *that* streaming degraded; the exception says *why*).
+    assert isinstance(session.last_prefetch_error, InjectedFault)
+    assert session.last_prefetch_error.site == "prefetch"
     # Faulted prefetches degrade those groups to synchronous loads — the
     # session never fails a request over a prefetch.
     assert all(r is not None for r in responses)
