@@ -1,0 +1,281 @@
+"""Input-adaptive serving sweep: confidence gating vs the all-blocks floor.
+
+A mixed-difficulty Poisson trace — ~70% *easy* requests (large-norm inputs
+whose representation is already decisive) and ~30% *hard* ones — is served
+twice through engines that differ in exactly one policy knob:
+
+* **floor** — the ungated path: every request pays every block of its
+  suffix (the all-blocks floor every previous PR optimized);
+* **adaptive** — ``EnginePolicy.adaptive``: a per-row confidence gate
+  (mean absolute activation) inside the fused suffixes lets a row skip a
+  block once its confidence clears the threshold, with online gate-model
+  calibration feeding the expected-cost predictions.
+
+The program is genuinely input-adaptive (the regime AdaMTL/MIME target):
+each block applies a *damped* residual refinement ``h + tanh(h @ W) *
+relu(1 - mean|h|)`` — once a row's mean activation passes 1 the refinement
+vanishes, so for easy traffic the deep blocks are identities and skipping
+them is exact.  The confidence threshold sits just below the damping
+cutoff, which is why adaptive execution loses (essentially) no accuracy.
+
+Gates (dry-run included; any failure exits 1):
+
+* **counter exactness** — ``session.stats == session.predicted`` field for
+  field in both arms (the adaptive prediction replays each group's
+  realized gate trace);
+* **accuracy** — >= 99% per-(request, task) argmax agreement between the
+  adaptive and floor arms, and *exact* (allclose) outputs on easy
+  requests, whose skipped blocks are identities;
+* **coverage** — the adaptive arm actually gated rows off
+  (``block_rows_gated > 0``) and spent fewer flops than the floor;
+* **speedup** — >= 1.3x modelled per-request seconds vs the floor on this
+  easy-heavy trace;
+* **calibration** — after one calibrated pass, re-serving the trace gives
+  a-priori expected flops within 5% of the realized flops.
+
+Machine-readable results land in the ``adaptive_sweep`` section of
+``BENCH_serving.json``.
+
+Usage: ``PYTHONPATH=src python benchmarks/serving_adaptive.py [--dry-run]``
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serving_adaptive.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.common import emit, update_bench_json
+from benchmarks.serving_admission import SimClock
+from benchmarks.serving_batch import GRAPH
+from benchmarks.serving_groups import SUBSETS
+from repro.core import BlockCost, MSP430, MultitaskProgram
+from repro.serving import (
+    AdaptivePolicy, EnginePolicy, MultitaskEngine, MultitaskRequest,
+    RequestGroupScheduler, WindowPolicy,
+)
+
+EASY_FRACTION = 0.7    # of the trace; easy = large-norm, exits after 1 block
+EASY_SCALE, HARD_SCALE = 2.0, 0.2
+THRESHOLD = 0.9        # confidence gate; just under the damping cutoff (1.0)
+AGREEMENT_GATE = 0.99  # adaptive-vs-floor argmax agreement
+SPEEDUP_GATE = 1.3     # modelled per-request seconds: floor / adaptive
+CALIBRATION_GATE = 0.05  # |expected - realized| / realized flops, 2nd pass
+
+
+def build_adaptive_program(dim: int, seed: int = 0) -> MultitaskProgram:
+    """Damped-residual blocks + 8-way linear heads.
+
+    The refinement ``tanh(h @ W) * relu(1 - mean|h|)`` dies once the row's
+    mean activation reaches 1: hard (small-norm) inputs keep refining while
+    easy (large-norm) inputs pass through unchanged — the input-conditional
+    compute profile the adaptive gate exploits.  One shared block fn object
+    keeps every suffix on the fused ``lax.scan`` path.
+    """
+    rng = np.random.default_rng(seed)
+    costs = [
+        BlockCost(weight_bytes=4.0 * dim * dim, flops=2.0 * dim * dim)
+        for _ in range(GRAPH.depth)
+    ]
+
+    def block(p, h):
+        damp = jnp.maximum(0.0, 1.0 - jnp.mean(jnp.abs(h)))
+        return h + jnp.tanh(h @ p) * damp
+
+    node_params = {
+        node: jnp.asarray(rng.normal(size=(dim, dim)) / np.sqrt(dim),
+                          jnp.float32)
+        for node in GRAPH.nodes()
+    }
+    heads = [lambda p, h: h @ p] * GRAPH.num_tasks
+    head_params = [jnp.asarray(rng.normal(size=(dim, 8)), jnp.float32)
+                   for _ in range(GRAPH.num_tasks)]
+    return MultitaskProgram(
+        GRAPH, [block] * GRAPH.depth, node_params, heads, head_params, costs
+    )
+
+
+def mixed_trace(n_requests: int, dim: int, rate: float = 200.0, seed: int = 3):
+    """(arrival_time, request, easy?) triples: Poisson arrivals, cycling
+    task subsets, and a fixed deterministic easy/hard mixture."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    out = []
+    for i in range(n_requests):
+        easy = (i % 10) < round(EASY_FRACTION * 10)
+        scale = EASY_SCALE if easy else HARD_SCALE
+        x = jnp.asarray(rng.normal(size=(dim,)) * scale, jnp.float32)
+        req = MultitaskRequest(x=x, tasks=SUBSETS[i % len(SUBSETS)])
+        out.append((float(arrivals[i]), req, easy))
+    return out
+
+
+def run_trace(prog, trace, shapes, adaptive):
+    """Serve the trace arrival-driven; returns (session, responses)."""
+    eng = MultitaskEngine(
+        prog, hw=MSP430,
+        # A windowed admission sized to the arrival rate, so each planning
+        # batch fills the per-subset buckets to the largest batch shape —
+        # large batches are where gated flops dominate the (physical,
+        # ungated) weight loads.
+        policy=EnginePolicy(
+            adaptive=adaptive,
+            scheduling=WindowPolicy(max_wait=0.4, max_group_size=128),
+        ),
+        scheduler=RequestGroupScheduler(batch_shapes=shapes),
+    )
+    session, responses = replay_trace(eng, trace)
+    return eng, session, responses
+
+
+def replay_trace(eng, trace):
+    clock = SimClock()
+    session = eng.session(clock=clock)
+    futures = []
+    for t, req, _easy in trace:
+        clock.t = t
+        futures.append(session.submit(req))
+        session.step()
+    session.drain()
+    responses = [f.result() for f in futures]
+    jax.block_until_ready([list(r.outputs.values()) for r in responses])
+    return session, responses
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes (gates are identical either way)")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="block width (default 64, dry-run 16)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace length (default 96, dry-run 30)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable results file ('' disables)")
+    args = ap.parse_args(argv)
+
+    dim = args.dim or (16 if args.dry_run else 64)
+    n_req = args.requests or (30 if args.dry_run else 96)
+    shapes = (4, 8, 16)
+    hw = MSP430
+
+    prog = build_adaptive_program(dim)
+    trace = mixed_trace(n_req, dim)
+
+    failures: list = []
+
+    def check(ok, msg):
+        if not ok:
+            failures.append(msg)
+            print(f"FAIL: {msg}", file=sys.stderr)
+
+    policy = AdaptivePolicy(threshold=THRESHOLD, min_blocks=1,
+                            calibrate_online=True)
+    arms = {}
+    for name, adaptive in (("floor", None), ("adaptive", policy)):
+        eng, session, responses = run_trace(prog, trace, shapes, adaptive)
+        arms[name] = (eng, session, responses)
+        check(session.stats == session.predicted,
+              f"{name}: executed counters diverge from prediction\n"
+              f"  got  {session.stats}\n  want {session.predicted}")
+
+    (_, s_floor, r_floor) = arms["floor"]
+    (eng_ad, s_ad, r_ad) = arms["adaptive"]
+
+    # Gate: gating actually happened and bought flops.
+    check(s_ad.stats.block_rows_gated > 0,
+          "adaptive: no rows were gated — the sweep is vacuous")
+    check(s_ad.stats.flops_executed < s_floor.stats.flops_executed,
+          "adaptive: spent no fewer flops than the all-blocks floor")
+    # Loads are physical (the fused scan consumes all stacked params), so
+    # gating must not change the byte volume.
+    check(s_ad.stats.weight_bytes_loaded == s_floor.stats.weight_bytes_loaded,
+          "adaptive: loaded a different byte volume than the floor")
+
+    # Gate: accuracy proxy — argmax agreement, exactness on easy requests.
+    agree = total = 0
+    for i, ((_, _, easy), ra, rf) in enumerate(zip(trace, r_ad, r_floor)):
+        check(set(ra.outputs) == set(rf.outputs),
+              f"request {i}: task set mismatch")
+        for t in rf.outputs:
+            total += 1
+            agree += int(np.argmax(np.asarray(ra.outputs[t]))
+                         == np.argmax(np.asarray(rf.outputs[t])))
+            if easy and not np.allclose(np.asarray(ra.outputs[t]),
+                                        np.asarray(rf.outputs[t]),
+                                        rtol=1e-5, atol=1e-6):
+                check(False, f"easy request {i} task {t}: outputs diverge "
+                             f"(skipped blocks should be identities)")
+    agreement = agree / max(total, 1)
+    check(agreement >= AGREEMENT_GATE,
+          f"argmax agreement {agreement:.4f} < {AGREEMENT_GATE}")
+
+    # Gate: modelled per-request speedup on the easy-heavy trace.
+    floor_s = s_floor.stats.seconds(hw) / n_req
+    adapt_s = s_ad.stats.seconds(hw) / n_req
+    speedup = floor_s / adapt_s
+    check(speedup >= SPEEDUP_GATE,
+          f"adaptive speedup {speedup:.2f}x < {SPEEDUP_GATE}x "
+          f"({floor_s:.6f}s vs {adapt_s:.6f}s per request)")
+
+    # Gate: a second pass over the same traffic with the online-calibrated
+    # gate model predicts its realized flops a priori within 5%.
+    s_ad2, _ = replay_trace(eng_ad, trace)
+    check(s_ad2.stats == s_ad2.predicted,
+          "adaptive 2nd pass: executed counters diverge from prediction")
+    rel_err = (abs(s_ad2.expected.flops_executed
+                   - s_ad2.stats.flops_executed)
+               / s_ad2.stats.flops_executed)
+    check(rel_err <= CALIBRATION_GATE,
+          f"calibrated expected flops off by {rel_err:.4f} "
+          f"(> {CALIBRATION_GATE})")
+
+    emit("serve_adaptive_floor", floor_s * 1e6,
+         f"modelled_per_request;flops={s_floor.stats.flops_executed:.0f}")
+    emit("serve_adaptive_gated", adapt_s * 1e6,
+         f"modelled_per_request;speedup={speedup:.2f}x;"
+         f"gated_rows={s_ad.stats.block_rows_gated:.0f};"
+         f"agreement={agreement:.4f};calib_err={rel_err:.4f}")
+
+    if args.json:
+        update_bench_json(args.json, "adaptive_sweep", {
+            "dim": dim, "requests": n_req, "dry_run": bool(args.dry_run),
+            "batch_shapes": list(shapes),
+            "subsets": [list(s) for s in SUBSETS], "hw": hw.name,
+            "easy_fraction": EASY_FRACTION, "threshold": THRESHOLD,
+            "agreement_gate": AGREEMENT_GATE, "speedup_gate": SPEEDUP_GATE,
+            "calibration_gate": CALIBRATION_GATE,
+            "floor": {
+                "per_request_seconds": floor_s,
+                "flops_executed": s_floor.stats.flops_executed,
+                "weight_bytes_loaded": s_floor.stats.weight_bytes_loaded,
+            },
+            "adaptive": {
+                "per_request_seconds": adapt_s,
+                "flops_executed": s_ad.stats.flops_executed,
+                "flops_gated": s_ad.stats.flops_gated,
+                "block_rows_fired": s_ad.stats.block_rows_fired,
+                "block_rows_gated": s_ad.stats.block_rows_gated,
+                "weight_bytes_loaded": s_ad.stats.weight_bytes_loaded,
+            },
+            "speedup_adaptive_vs_floor": speedup,
+            "argmax_agreement": agreement,
+            "calibrated_expected_flops_rel_err": rel_err,
+        })
+    if failures:
+        return 1
+    print(f"# adaptive {speedup:.2f}x faster modelled per request "
+          f"({SPEEDUP_GATE}x gate); argmax agreement {agreement:.4f} "
+          f"({AGREEMENT_GATE} gate)")
+    print(f"# calibrated expected flops within {rel_err:.4f} of realized "
+          f"({CALIBRATION_GATE} gate); counters exact in both arms")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

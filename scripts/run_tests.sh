@@ -32,3 +32,8 @@ python benchmarks/serving_streaming.py --dry-run
 # counters including checkpoint_bytes / checkpoint_seconds, and the >= 1.5x
 # re-executed-compute-joules gate for checkpointed resume vs restart.
 python benchmarks/serving_intermittent.py --dry-run
+# Input-adaptive sweep: confidence-gated vs all-blocks-floor serving on a
+# mixed easy/hard Poisson trace — exact counters in both arms, >= 1.3x
+# modelled per-request speedup, >= 99% argmax agreement, and calibrated
+# expected flops within 5% of realized.
+python benchmarks/serving_adaptive.py --dry-run

@@ -1,0 +1,22 @@
+"""Input-adaptive execution: confidence gating, gate models, policy.
+
+See README "Input-adaptive serving".  The executor consumes a
+:class:`BlockGater`, the cost model a :class:`GateModel`, and the serving
+stack an :class:`AdaptivePolicy` that binds the two plus the deadline
+threshold ladder.
+"""
+from repro.adaptive.gate_model import GateModel, GateModelCalibrator
+from repro.adaptive.gating import (
+    ALWAYS_FIRE, GATE_MODES, BlockGater, mean_abs_confidence,
+)
+from repro.adaptive.policy import AdaptivePolicy
+
+__all__ = [
+    "ALWAYS_FIRE",
+    "GATE_MODES",
+    "AdaptivePolicy",
+    "BlockGater",
+    "GateModel",
+    "GateModelCalibrator",
+    "mean_abs_confidence",
+]

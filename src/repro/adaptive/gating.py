@@ -1,0 +1,92 @@
+"""Confidence-based block gating for fused-suffix execution.
+
+The AdaMTL/MIME observation: multitask inference cost should be
+input-conditional.  A :class:`BlockGater` attaches a pure confidence
+function to the executor's fused suffix programs; each shape-preserving
+block then runs only for the batch rows whose confidence is still *below*
+the threshold (low confidence = keep refining, high confidence = the
+representation is already decisive and the row can stop paying).
+
+Two modes:
+
+* ``"early_exit"`` — once a row's confidence clears the threshold it skips
+  every remaining block of the suffix (the row has *exited*).
+* ``"per_block"`` — each block re-evaluates the gate independently; a row
+  can skip one block and fire a later one.
+
+For shape-preserving passthrough gating with a pure confidence function the
+two coincide on homogeneous (scan-mode) suffixes: a skipped row's activation
+is unchanged, so its confidence is unchanged, so it keeps skipping.  That
+equivalence is what lets checkpoint segments and crash recovery re-derive
+identical gate decisions without threading an alive mask across program
+boundaries.
+
+Everything here is jit-compatible: thresholds enter the compiled program as
+a runtime ``(L,)`` float32 array scanned alongside the stacked params, so
+threshold-ladder changes never retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+GATE_MODES = ("early_exit", "per_block")
+
+# A threshold of +inf always fires: conf < inf for every finite confidence.
+ALWAYS_FIRE = math.inf
+
+
+def mean_abs_confidence(h) -> jnp.ndarray:
+    """Default confidence: mean absolute activation of one row.
+
+    Cheap (one reduction over the row's features), pure, and monotone under
+    the benchmark's norm-separated easy/hard traffic.  Callers with a real
+    head can pass e.g. max-softmax-probability instead.
+    """
+    return jnp.mean(jnp.abs(h))
+
+
+@dataclasses.dataclass
+class BlockGater:
+    """Per-block confidence gate the executor threads into fused suffixes.
+
+    Attributes:
+      confidence_fn: pure ``row -> scalar`` confidence (vmapped over the
+        batch by the executor).  Must be jit-traceable.
+      mode: ``"early_exit"`` or ``"per_block"`` (see module docstring).
+      threshold: fire a block for a row iff ``confidence < threshold``;
+        ``math.inf`` (the default) fires everything — the all-blocks floor.
+        Mutable on purpose: the serving session retunes it per group from
+        the :class:`~repro.adaptive.policy.AdaptivePolicy` deadline ladder,
+        and because it reaches the compiled program as a runtime array this
+        never recompiles.
+      min_blocks: blocks ``0 .. min_blocks-1`` of every path always fire
+        (their per-depth threshold is ``inf``), bounding how early a row
+        may exit regardless of threshold.
+    """
+
+    confidence_fn: Callable = mean_abs_confidence
+    mode: str = "early_exit"
+    threshold: float = ALWAYS_FIRE
+    min_blocks: int = 1
+
+    def __post_init__(self) -> None:
+        if self.mode not in GATE_MODES:
+            raise ValueError(f"unknown gate mode {self.mode!r}")
+        if self.min_blocks < 0:
+            raise ValueError("min_blocks must be >= 0")
+
+    def suffix_thresholds(self, resume: int, depth: int) -> Tuple[float, ...]:
+        """Per-depth thresholds for a suffix resuming at ``resume``.
+
+        Depths below ``min_blocks`` get ``inf`` (always fire); the rest get
+        the current ``threshold``.  Returned as a plain tuple — the executor
+        converts it to the runtime float32 array the compiled program scans.
+        """
+        return tuple(
+            ALWAYS_FIRE if d < self.min_blocks else float(self.threshold)
+            for d in range(resume, depth)
+        )

@@ -16,13 +16,14 @@ reproduces the paper's Figure-4 example where every block costs 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.task_graph import TaskGraph
 from repro.core.types import (
     BlockCost, ExecutionStats, HardwareModel, NodeId, Residency,
+    TaskGateRecord,
 )
 
 
@@ -43,6 +44,12 @@ class GraphCostModel:
         it — each chip streams only its slice — so the ordering solvers
         minimize the *sharded* schedule cost rather than the single-device
         proxy.  ``1`` (single device) reproduces the original model exactly.
+      gate_model: optional :class:`~repro.adaptive.gate_model.GateModel`
+        giving per-block fire probabilities and per-task execution
+        probabilities — the default for the ``expected_*`` family of
+        methods, which predict *expected* counters/costs under
+        input-adaptive gating.  ``None`` keeps every exact method exact and
+        makes the expected methods degenerate to the all-blocks floor.
     """
 
     graph: TaskGraph
@@ -50,6 +57,7 @@ class GraphCostModel:
     hw: Optional[HardwareModel] = None
     metric: str = "time"
     weight_shards: int = 1
+    gate_model: Optional[Any] = None
 
     def block_cost(self, depth: int) -> float:
         """Load + execute cost of the depth-``depth`` block."""
@@ -131,6 +139,75 @@ class GraphCostModel:
                     c[i, j] = self.switching_cost(i, j)
         return c
 
+    # ------------------------------------------------------- expected costs
+    def expected_block_cost(
+        self, task: int, depth: int, gate_model: Optional[Any] = None
+    ) -> float:
+        """Expected load + execute cost of ``task``'s depth-``depth`` block.
+
+        Under a gate model the task runs with probability ``p`` and, given
+        it runs, the block's execute cost is paid only by the fraction
+        ``q`` of rows its gate fires for; the load is paid whenever the
+        task dispatches (loads are physical regardless of fires):
+        ``p * (load + q * exec)``.  Without a model this is exactly
+        :meth:`block_cost`.
+        """
+        gm = gate_model if gate_model is not None else self.gate_model
+        if gm is None:
+            return self.block_cost(depth)
+        load = self.load_cost(depth)
+        return gm.task_probability(task) * (
+            load
+            + gm.fire_probability(task, depth)
+            * (self.block_cost(depth) - load)
+        )
+
+    def expected_switching_cost(
+        self, prev: int, nxt: int, gate_model: Optional[Any] = None
+    ) -> float:
+        """Expected ``c[prev, nxt]``: the probability-weighted non-shared
+        suffix of ``nxt`` (see :meth:`expected_block_cost`)."""
+        if prev == nxt:
+            return 0.0
+        shared = self.graph.shared_prefix_depth(prev, nxt)
+        return sum(
+            self.expected_block_cost(nxt, d, gate_model)
+            for d in range(shared, self.graph.depth)
+        )
+
+    def expected_resume_load_cost(
+        self, resident: Residency, task: int, gate_model: Optional[Any] = None
+    ) -> float:
+        """Expected-cost analogue of :meth:`resume_load_cost`: the load
+        bytes only move if the task dispatches at all, so the warm-start
+        term scales by its execution probability."""
+        gm = gate_model if gate_model is not None else self.gate_model
+        base = self.resume_load_cost(resident, task)
+        if gm is None:
+            return base
+        return gm.task_probability(task) * base
+
+    def expected_cost_matrix(
+        self, gate_model: Optional[Any] = None
+    ) -> np.ndarray:
+        """The ``n x n`` *expected* switching-cost matrix.
+
+        What the ordering solvers minimize for input-adaptive (or
+        conditionally-constrained) engines: feeding this matrix to
+        ``solve_suborder`` / ``optimal_order`` makes them optimize expected
+        bytes/FLOPs without any solver changes — the probabilities are
+        folded into the edge weights.  Note the matrix is generally
+        asymmetric: it weights by the *destination* task's probabilities.
+        """
+        gm = gate_model if gate_model is not None else self.gate_model
+        n = self.graph.num_tasks
+        c = np.zeros((n, n), dtype=np.float64)
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    c[i, j] = self.expected_switching_cost(i, j, gm)
+        return c
+
     # ----------------------------------------------------------- aggregates
     def order_cost(self, order: Sequence[int], cyclic: bool = False) -> float:
         """Total cost of executing all tasks in ``order``.
@@ -167,6 +244,8 @@ class GraphCostModel:
         stats: ExecutionStats,
         collectives: Optional["CollectiveCosts"] = None,
         first_task_resume: int = 0,
+        gate_trace: Optional[Sequence[TaskGateRecord]] = None,
+        gate_model: Optional[Any] = None,
     ) -> None:
         """One group's counter prediction, mutating ``resident``/``stats``.
 
@@ -194,10 +273,54 @@ class GraphCostModel:
         shared-prefix depth with its predecessor, so the per-``(task,
         resume)`` calibrated breakdown lands on the same counters the
         executor will report — exact by construction.
+
+        ``gate_trace`` replays a *realized* gate outcome (one
+        :class:`TaskGateRecord` per order position, the executor's
+        ``last_trace``): a ``weight == 0`` record is a task a legacy
+        ``gate=`` callback skipped for the whole group — it never
+        dispatched, so neither residency nor the activation walk advances
+        past it — while a partial-weight record scales the per-request
+        counters by the rows that ran, and ``fired`` splits each executed
+        block's flops into fired vs gated rows.  Records carrying a
+        ``resume`` are cross-checked against this walk's resume depth, so
+        any prediction/execution divergence raises instead of silently
+        mis-counting.
+
+        ``gate_model`` (mutually exclusive) predicts *expected* counters:
+        flop/task/fire counters are weighted by the model's task and fire
+        probabilities, while the structural counters (block invocations,
+        weight bytes, residency evolution, collectives) keep the all-run
+        walk — loads are physical whether or not rows fire (the scan
+        program consumes every stacked block's params), and an expected
+        residency walk over task-skip realizations would be ill-defined.
+        For pure per-block gating (every task runs) the expected counters
+        are the exact mean of the realized ones by linearity.
         """
+        if gate_trace is not None and gate_model is not None:
+            raise ValueError("gate_trace and gate_model are mutually exclusive")
+        if gate_trace is not None and len(gate_trace) != len(order):
+            raise ValueError(
+                f"gate trace has {len(gate_trace)} records for "
+                f"{len(order)} tasks"
+            )
         prev: Optional[int] = None
         act_floor = max(int(first_task_resume) - 1, 0)
-        for t in order:
+        for pos, t in enumerate(order):
+            rec = gate_trace[pos] if gate_trace is not None else None
+            if rec is not None and rec.task != t:
+                raise ValueError(
+                    f"gate trace record {pos} is for task {rec.task}, "
+                    f"order has task {t}"
+                )
+            if rec is not None and rec.weight == 0:
+                # Legacy-gated off for the whole group: never dispatched.
+                stats.tasks_skipped += batch_size
+                continue
+            w = int(rec.weight) if rec is not None else batch_size
+            p_t = (
+                gate_model.task_probability(t) if gate_model is not None
+                else 1.0
+            )
             path = self.graph.path(t)
             if prev is None:
                 shared = int(first_task_resume)
@@ -209,6 +332,21 @@ class GraphCostModel:
                     # this boot, so the executor starts the task from 0.
                     shared = 0
             act_floor = min(act_floor, shared)
+            if rec is not None and rec.resume is not None:
+                if int(rec.resume) != shared:
+                    raise ValueError(
+                        f"gate trace resume {rec.resume} for task {t} "
+                        f"diverges from the predicted resume {shared}"
+                    )
+            if (
+                rec is not None
+                and rec.fired is not None
+                and len(rec.fired) != self.graph.depth - shared
+            ):
+                raise ValueError(
+                    f"gate trace for task {t} has {len(rec.fired)} fire "
+                    f"counts for a {self.graph.depth - shared}-block suffix"
+                )
             for d in range(self.graph.depth):
                 bc = self.block_costs[d]
                 if d < shared:
@@ -221,16 +359,39 @@ class GraphCostModel:
                     # predicts the later reload the executor will do.
                     stats.blocks_skipped += 1
                     stats.weight_bytes_skipped += bc.weight_bytes
-                    stats.flops_skipped += batch_size * bc.flops
+                    stats.flops_skipped += (
+                        batch_size * p_t if gate_model is not None else w
+                    ) * bc.flops
                 else:
                     stats.blocks_executed += 1
                     if resident[d] == path[d]:
                         stats.weight_bytes_skipped += bc.weight_bytes
                     else:
                         stats.weight_bytes_loaded += bc.weight_bytes
-                    stats.flops_executed += batch_size * bc.flops
+                    if rec is not None and rec.fired is not None:
+                        f = int(rec.fired[d - shared])
+                        stats.flops_executed += f * bc.flops
+                        stats.flops_gated += (w - f) * bc.flops
+                        stats.block_rows_fired += f
+                        stats.block_rows_gated += w - f
+                    elif gate_model is not None:
+                        q = gate_model.fire_probability(t, d)
+                        stats.flops_executed += batch_size * p_t * q * bc.flops
+                        stats.flops_gated += (
+                            batch_size * p_t * (1.0 - q) * bc.flops
+                        )
+                        stats.block_rows_fired += batch_size * p_t * q
+                        stats.block_rows_gated += batch_size * p_t * (1.0 - q)
+                    else:
+                        stats.flops_executed += w * bc.flops
                     resident[d] = path[d]
-            stats.tasks_run += batch_size
+            if gate_model is not None:
+                stats.tasks_run += batch_size * p_t
+                stats.tasks_skipped += batch_size * (1.0 - p_t)
+            else:
+                stats.tasks_run += w
+                if rec is not None:
+                    stats.tasks_skipped += batch_size - w
             if collectives is not None:
                 stats.add_collectives(collectives.breakdown(t, shared))
             prev = t
@@ -243,6 +404,7 @@ class GraphCostModel:
         collectives: Optional["CollectiveCosts"] = None,
         first_task_resume: int = 0,
         checkpoints: Optional[Sequence["CheckpointSite"]] = None,
+        gate_trace: Optional[Sequence[TaskGateRecord]] = None,
     ) -> ExecutionStats:
         """Counter-level prediction the executor must match exactly.
 
@@ -267,6 +429,11 @@ class GraphCostModel:
         ``checkpoints`` (a :meth:`plan_checkpoints` plan) adds the group's
         checkpoint-write counters, which the journaling engine accounts
         from the *same* plan — exact by construction.
+
+        ``gate_trace`` conditions the prediction on a realized gate outcome
+        (see :meth:`_predict_into`): with the executor's actual trace the
+        predicted counters equal the executed ones field-for-field even
+        under legacy per-request gates and adaptive block gating.
         """
         resident: List[Optional[NodeId]] = (
             list(resume) if resume is not None else [None] * self.graph.depth
@@ -279,6 +446,46 @@ class GraphCostModel:
         self._predict_into(
             order, batch_size, resident, stats, collectives,
             first_task_resume=first_task_resume,
+            gate_trace=gate_trace,
+        )
+        for site in checkpoints or ():
+            stats.checkpoint_bytes += site.bytes
+            stats.checkpoint_seconds += site.seconds
+        return stats
+
+    def expected_stats(
+        self,
+        order: Sequence[int],
+        batch_size: int = 1,
+        resume: Optional[Residency] = None,
+        collectives: Optional["CollectiveCosts"] = None,
+        first_task_resume: int = 0,
+        checkpoints: Optional[Sequence["CheckpointSite"]] = None,
+        gate_model: Optional[Any] = None,
+    ) -> ExecutionStats:
+        """*Expected* counters under a gate model (defaults to this model's
+        :attr:`gate_model`).
+
+        The pre-execution estimate of what :meth:`predicted_stats` with the
+        realized ``gate_trace`` will report: flop/task/fire counters are
+        probability-weighted while structural counters keep the all-run
+        walk (see :meth:`_predict_into`).  With ``gate_model=None`` and no
+        model attached this is exactly :meth:`predicted_stats` — the
+        all-blocks floor.
+        """
+        gm = gate_model if gate_model is not None else self.gate_model
+        resident: List[Optional[NodeId]] = (
+            list(resume) if resume is not None else [None] * self.graph.depth
+        )
+        if len(resident) != self.graph.depth:
+            raise ValueError(
+                f"resume has {len(resident)} slots, expected {self.graph.depth}"
+            )
+        stats = ExecutionStats()
+        self._predict_into(
+            order, batch_size, resident, stats, collectives,
+            first_task_resume=first_task_resume,
+            gate_model=gm,
         )
         for site in checkpoints or ():
             stats.checkpoint_bytes += site.bytes
@@ -323,6 +530,7 @@ class GraphCostModel:
         self,
         order: Sequence[int],
         resident: Optional[Residency] = None,
+        gate_trace: Optional[Sequence[TaskGateRecord]] = None,
     ) -> List[Tuple[int, NodeId]]:
         """The ``(depth, node)`` weight loads executing ``order`` will issue.
 
@@ -343,6 +551,10 @@ class GraphCostModel:
         node and the executor commits it at most once, so the schedule
         lists each node once, at its first load.  The revisit falls through
         to a synchronous load on both the predicted and executed side.
+
+        ``gate_trace`` conditions the schedule on a realized gate outcome:
+        a ``weight == 0`` record's task never dispatched, so it issues no
+        loads and does not advance the walk — the load set of a gated run.
         """
         state: List[Optional[NodeId]] = (
             list(resident) if resident is not None else [None] * self.graph.depth
@@ -351,10 +563,17 @@ class GraphCostModel:
             raise ValueError(
                 f"resident has {len(state)} slots, expected {self.graph.depth}"
             )
+        if gate_trace is not None and len(gate_trace) != len(order):
+            raise ValueError(
+                f"gate trace has {len(gate_trace)} records for "
+                f"{len(order)} tasks"
+            )
         loads: List[Tuple[int, NodeId]] = []
         staged: set = set()
         prev: Optional[int] = None
-        for t in order:
+        for pos, t in enumerate(order):
+            if gate_trace is not None and gate_trace[pos].weight == 0:
+                continue  # never dispatched: no loads, walk unchanged
             path = self.graph.path(t)
             shared = (
                 self.graph.shared_prefix_depth(prev, t) if prev is not None else 0
@@ -525,8 +744,13 @@ class PlanPredictor:
     executor does.  ``carry_residency=False`` re-predicts every group from a
     cold slate (the ``warm_start=False`` engine's semantics).
 
-    ``stats`` is the cumulative prediction so far; :meth:`append` returns
-    the per-group delta.
+    ``stats`` is the cumulative prediction so far — realized-conditional
+    when groups append with their ``gate_trace``; :meth:`append` returns
+    the per-group delta.  ``expected`` accumulates the parallel
+    *pre-execution* prediction under the model's (or per-append) gate
+    model: its residency walk is tracked separately because a trace's
+    whole-group-gated tasks do not advance residency while the expected
+    (structural all-run) walk does.
     """
 
     def __init__(
@@ -545,7 +769,9 @@ class PlanPredictor:
             raise ValueError(
                 f"resume has {len(self._resident)} slots, expected {depth}"
             )
+        self._exp_resident: List[Optional[NodeId]] = list(self._resident)
         self.stats = ExecutionStats()
+        self.expected = ExecutionStats()
         self.groups = 0
 
     @property
@@ -562,6 +788,8 @@ class PlanPredictor:
         overlap_seconds: Optional[float] = None,
         first_task_resume: int = 0,
         checkpoints: Optional[Sequence[CheckpointSite]] = None,
+        gate_trace: Optional[Sequence[TaskGateRecord]] = None,
+        gate_model: Optional[Any] = None,
     ) -> ExecutionStats:
         """Account one more admitted group; returns that group's delta.
 
@@ -583,11 +811,24 @@ class PlanPredictor:
         latter the group's planned checkpoint writes
         (``GraphCostModel.plan_checkpoints``) folded into
         ``checkpoint_bytes`` / ``checkpoint_seconds``.
+
+        ``gate_trace`` conditions this group's *realized* delta on its
+        executed gate outcome (``GraphCostModel.predicted_stats`` semantics)
+        while ``gate_model`` (defaults to the model's own) drives the
+        parallel ``expected`` accumulator's delta — both walks run every
+        append so the two residency tracks stay consistent.
         """
         if not self.carry_residency:
             self._resident = [None] * self.model.graph.depth
+            self._exp_resident = [None] * self.model.graph.depth
+        gm = gate_model if gate_model is not None else self.model.gate_model
         loads = (
-            self.model.plan_loads(order, self._resident)
+            self.model.plan_loads(order, self._resident, gate_trace=gate_trace)
+            if overlap_seconds is not None
+            else []
+        )
+        exp_loads = (
+            self.model.plan_loads(order, self._exp_resident)
             if overlap_seconds is not None
             else []
         )
@@ -595,10 +836,19 @@ class PlanPredictor:
         self.model._predict_into(
             order, int(batch_size), self._resident, delta, collectives,
             first_task_resume=first_task_resume,
+            gate_trace=gate_trace,
+        )
+        exp_delta = ExecutionStats()
+        self.model._predict_into(
+            order, int(batch_size), self._exp_resident, exp_delta, collectives,
+            first_task_resume=first_task_resume,
+            gate_model=gm,
         )
         for site in checkpoints or ():
             delta.checkpoint_bytes += site.bytes
             delta.checkpoint_seconds += site.seconds
+            exp_delta.checkpoint_bytes += site.bytes
+            exp_delta.checkpoint_seconds += site.seconds
         if overlap_seconds is not None and loads:
             delta.prefetched_bytes = sum(
                 self.model.block_costs[d].weight_bytes for d, _node in loads
@@ -606,8 +856,20 @@ class PlanPredictor:
             delta.stream_stall_seconds = self.model.prefetch_stall_seconds(
                 [d for d, _node in loads], overlap_seconds
             )
+        if overlap_seconds is not None and exp_loads:
+            exp_delta.prefetched_bytes = sum(
+                self.model.block_costs[d].weight_bytes
+                for d, _node in exp_loads
+            )
+            exp_delta.stream_stall_seconds = (
+                self.model.prefetch_stall_seconds(
+                    [d for d, _node in exp_loads], overlap_seconds
+                )
+            )
         delta.tasks_skipped += int(extra_tasks_skipped)
+        exp_delta.tasks_skipped += int(extra_tasks_skipped)
         self.stats = self.stats.merge(delta)
+        self.expected = self.expected.merge(exp_delta)
         self.groups += 1
         return delta
 

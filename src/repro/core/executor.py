@@ -58,11 +58,14 @@ from typing import (
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.constraints import Constraints
 from repro.core.task_graph import TaskGraph
-from repro.core.types import BlockCost, ExecutionStats, NodeId
+from repro.core.types import (
+    BlockCost, ExecutionStats, NodeId, TaskGateRecord,
+)
 from repro.sharding.policy import ShardingPolicy, TP_POLICY
 from repro.sharding.utils import fit_spec
 
@@ -106,6 +109,14 @@ def _leaf_specs(params: Any) -> Tuple:
     """(treedef, leaf shapes/dtypes) fingerprint for stackability checks."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
     return treedef, tuple((jnp.shape(l), jnp.result_type(l)) for l in leaves)
+
+
+def _gate_bcast(fire: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a per-row ``(B,)`` fire mask to broadcast against ``y``
+    (``(B, ...)``) inside ``jnp.where``; scalar masks broadcast as-is."""
+    if jnp.ndim(fire) == 0:
+        return fire
+    return fire.reshape(fire.shape + (1,) * (jnp.ndim(y) - jnp.ndim(fire)))
 
 
 @dataclasses.dataclass
@@ -269,6 +280,16 @@ class TaskGraphExecutor:
         collective calibration lowers.  Requires the fused jitted path.
       sharding: logical->physical axis policy; defaults to ``TP_POLICY``
         when a mesh is given.
+      gater: optional :class:`~repro.adaptive.gating.BlockGater` making
+        execution input-conditional: shape-preserving blocks of every
+        dispatched suffix run only for the batch rows whose confidence is
+        still below the gater's threshold, skipped rows pass their
+        activation through unchanged, and the realized per-(block, row)
+        fire counts land in ``ExecutionStats`` (``block_rows_fired`` /
+        ``flops_gated``) and :attr:`last_gate_record`.  Gating is masked
+        *inside* the compiled programs (``jnp.where`` on the scan carry),
+        so jit keys stay ``(task, resume, shape)`` — thresholds enter as a
+        runtime array and never retrace.
     """
 
     def __init__(
@@ -278,10 +299,12 @@ class TaskGraphExecutor:
         fused: bool = True,
         mesh: Optional[Any] = None,
         sharding: Optional[ShardingPolicy] = None,
+        gater: Optional[Any] = None,
     ):
         self.program = program
         self._jit = jit_blocks
         self._fused = fused
+        self.gater = gater
         if mesh is not None and not (jit_blocks and fused):
             raise ValueError(
                 "mesh-sharded execution requires the fused jitted dispatch "
@@ -325,7 +348,26 @@ class TaskGraphExecutor:
         # not part of ExecutionStats (those are cost-model-predictable logical
         # counters — dispatches depend on the fused/per-block mode).
         self.dispatch_count = 0
+        # Adaptive-gating readback: per-dispatch realized fire masks of the
+        # current task (``(start_depth, bool array)`` fragments, one per
+        # dispatched segment), the finished task's TaskGateRecord, and the
+        # per-task trace of the last run/run_batch call.
+        self._fired_frags: List[Tuple[int, Any]] = []
+        self.last_gate_record: Optional[TaskGateRecord] = None
+        self.last_trace: List[TaskGateRecord] = []
         self.reset()
+
+    def _gate_key(self) -> Optional[Tuple]:
+        """Compile-cache discriminator for the active gater.
+
+        Joins every program/calibration cache key so toggling or swapping
+        the gater (different mode or confidence fn) never hits a program
+        traced for other gate semantics.  Threshold changes do NOT change
+        the key — thresholds are runtime inputs.
+        """
+        if self.gater is None:
+            return None
+        return (self.gater.mode, self.gater.confidence_fn)
 
     @property
     def fused(self) -> bool:
@@ -573,10 +615,17 @@ class TaskGraphExecutor:
         by block inside one program.  ``shape``/``dtype`` describe the
         suffix's input ``h``; on a mesh every activation (and the head
         output) is additionally constrained to the batch layout.
+
+        With a gater the program takes an extra per-depth threshold array
+        (runtime float32, scanned alongside the params) and returns a third
+        output: the ``(L, B)`` (or ``(L,)`` unbatched) boolean fire masks.
+        A gated-off row's activation passes through unchanged
+        (``jnp.where`` on the carry); blocks that are not shape-preserving
+        cannot pass rows through and always fire.
         """
         shape = tuple(shape)
         dtype = jnp.dtype(dtype)
-        key = (task, resume, batched, shape, dtype)
+        key = (task, resume, batched, shape, dtype, self._gate_key())
         if key in self._compiled_fused:
             return self._compiled_fused[key]
 
@@ -622,35 +671,116 @@ class TaskGraphExecutor:
                 ):
                     mode = "scan"
 
+        gater = self.gater
+        if gater is not None:
+            conf_fn = (
+                jax.vmap(gater.confidence_fn) if batched
+                else gater.confidence_fn
+            )
+            early = gater.mode == "early_exit"
+
         if mode == "scan":
             step_fn = fns[0]
 
-            def fused(stacked, head_p, h):
-                def step(carry, p):
-                    y = step_fn(p, carry)
-                    if cst is not None:
-                        y = cst(y)
-                    return y, y
+            if gater is None:
 
-                h_last, acts = jax.lax.scan(step, h, stacked)
-                out = head(head_p, h_last)
-                return acts, out if cst is None else cst(out)
+                def fused(stacked, head_p, h):
+                    def step(carry, p):
+                        y = step_fn(p, carry)
+                        if cst is not None:
+                            y = cst(y)
+                        return y, y
+
+                    h_last, acts = jax.lax.scan(step, h, stacked)
+                    out = head(head_p, h_last)
+                    return acts, out if cst is None else cst(out)
+
+            else:
+
+                def fused(stacked, thrs, head_p, h):
+                    alive0 = (
+                        jnp.ones(h.shape[:1], bool) if batched
+                        else jnp.asarray(True)
+                    )
+
+                    def step(carry, inp):
+                        hh, alive = carry
+                        p, thr = inp
+                        fire = alive & (conf_fn(hh) < thr)
+                        y = step_fn(p, hh)
+                        y = jnp.where(_gate_bcast(fire, y), y, hh)
+                        if cst is not None:
+                            y = cst(y)
+                        return (y, fire if early else alive), (y, fire)
+
+                    (h_last, _), (acts, fired) = jax.lax.scan(
+                        step, (h, alive0), (stacked, thrs)
+                    )
+                    out = head(head_p, h_last)
+                    return acts, (out if cst is None else cst(out)), fired
 
         else:
 
-            def fused(params_tuple, head_p, h):
-                acts = []
-                for f, p in zip(fns, params_tuple):
-                    h = f(p, h)
-                    if cst is not None:
-                        h = cst(h)
-                    acts.append(h)
-                out = head(head_p, h)
-                return tuple(acts), out if cst is None else cst(out)
+            if gater is None:
+
+                def fused(params_tuple, head_p, h):
+                    acts = []
+                    for f, p in zip(fns, params_tuple):
+                        h = f(p, h)
+                        if cst is not None:
+                            h = cst(h)
+                        acts.append(h)
+                    out = head(head_p, h)
+                    return tuple(acts), out if cst is None else cst(out)
+
+            else:
+
+                def fused(params_tuple, thrs, head_p, h):
+                    alive = (
+                        jnp.ones(h.shape[:1], bool) if batched
+                        else jnp.asarray(True)
+                    )
+                    acts = []
+                    fired = []
+                    for i, (f, p) in enumerate(zip(fns, params_tuple)):
+                        y = f(p, h)
+                        if y.shape == h.shape and y.dtype == h.dtype:
+                            fire = alive & (conf_fn(h) < thrs[i])
+                            y = jnp.where(_gate_bcast(fire, y), y, h)
+                            if early:
+                                alive = fire
+                        else:
+                            # Shape-changing block: passthrough is
+                            # impossible, so every row computes it.
+                            fire = jnp.ones_like(alive)
+                        if cst is not None:
+                            y = cst(y)
+                        acts.append(y)
+                        fired.append(fire)
+                        h = y
+                    out = head(head_p, h)
+                    stacked_fired = (
+                        jnp.stack(fired) if fired
+                        else jnp.zeros(
+                            (0,) + (h.shape[:1] if batched else ()), bool
+                        )
+                    )
+                    return (
+                        tuple(acts),
+                        out if cst is None else cst(out),
+                        stacked_fired,
+                    )
 
         compiled = jax.jit(fused) if self._jit else fused
         self._compiled_fused[key] = (compiled, mode)
         return compiled, mode
+
+    def _suffix_thresholds(self, resume: int, stop: int) -> jnp.ndarray:
+        """The gater's per-depth thresholds for blocks ``resume .. stop-1``
+        as the runtime float32 array the compiled programs consume."""
+        return jnp.asarray(
+            self.gater.suffix_thresholds(resume, stop), jnp.float32
+        )
 
     def _run_suffix_fused(
         self, task: int, resume: int, h: jnp.ndarray, batched: bool
@@ -661,18 +791,21 @@ class TaskGraphExecutor:
             task, resume, batched, tuple(h.shape), jnp.result_type(h)
         )
         if mode == "scan":
-            acts, out = fn(
-                self._stacked_suffix_params(task, resume),
-                self._head_param(task),
-                h,
-            )
-            acts = [acts[i] for i in range(graph.depth - resume)]
+            params = self._stacked_suffix_params(task, resume)
         else:
-            acts, out = fn(
-                self._suffix_params(task, resume),
+            params = self._suffix_params(task, resume)
+        if self.gater is not None:
+            acts, out, fired = fn(
+                params,
+                self._suffix_thresholds(resume, graph.depth),
                 self._head_param(task),
                 h,
             )
+            self._fired_frags.append((resume, fired))
+        else:
+            acts, out = fn(params, self._head_param(task), h)
+        if mode == "scan":
+            acts = [acts[i] for i in range(graph.depth - resume)]
         self.dispatch_count += 1
         path = graph.path(task)
         for a, d in zip(acts, range(resume, graph.depth)):
@@ -721,10 +854,19 @@ class TaskGraphExecutor:
         Returns the per-depth activations only (the final segment of a
         checkpointed suffix still runs through :meth:`_fused_fn`, which owns
         the head).
+
+        With a gater the segment, like the full-suffix program, takes the
+        per-depth threshold array and returns ``(acts, fired)``.  Each
+        segment re-derives its alive mask from scratch (``alive = ones``):
+        for shape-preserving passthrough gating a skipped row's activation
+        — hence its confidence, hence its gate decision — is unchanged at
+        the boundary, so the re-derived mask equals the mask an uncut
+        suffix would have carried.  That is also why crash recovery replays
+        identical gate decisions deterministically.
         """
         shape = tuple(shape)
         dtype = jnp.dtype(dtype)
-        key = (task, start, stop, batched, shape, dtype)
+        key = (task, start, stop, batched, shape, dtype, self._gate_key())
         if key in self._compiled_segment:
             return self._compiled_segment[key]
 
@@ -756,29 +898,95 @@ class TaskGraphExecutor:
                 ):
                     mode = "scan"
 
+        gater = self.gater
+        if gater is not None:
+            conf_fn = (
+                jax.vmap(gater.confidence_fn) if batched
+                else gater.confidence_fn
+            )
+            early = gater.mode == "early_exit"
+
         if mode == "scan":
             step_fn = fns[0]
 
-            def seg(stacked, h):
-                def step(carry, p):
-                    y = step_fn(p, carry)
-                    if cst is not None:
-                        y = cst(y)
-                    return y, y
+            if gater is None:
 
-                _h_last, acts = jax.lax.scan(step, h, stacked)
-                return acts
+                def seg(stacked, h):
+                    def step(carry, p):
+                        y = step_fn(p, carry)
+                        if cst is not None:
+                            y = cst(y)
+                        return y, y
+
+                    _h_last, acts = jax.lax.scan(step, h, stacked)
+                    return acts
+
+            else:
+
+                def seg(stacked, thrs, h):
+                    alive0 = (
+                        jnp.ones(h.shape[:1], bool) if batched
+                        else jnp.asarray(True)
+                    )
+
+                    def step(carry, inp):
+                        hh, alive = carry
+                        p, thr = inp
+                        fire = alive & (conf_fn(hh) < thr)
+                        y = step_fn(p, hh)
+                        y = jnp.where(_gate_bcast(fire, y), y, hh)
+                        if cst is not None:
+                            y = cst(y)
+                        return (y, fire if early else alive), (y, fire)
+
+                    _last, (acts, fired) = jax.lax.scan(
+                        step, (h, alive0), (stacked, thrs)
+                    )
+                    return acts, fired
 
         else:
 
-            def seg(params_tuple, h):
-                acts = []
-                for f, p in zip(fns, params_tuple):
-                    h = f(p, h)
-                    if cst is not None:
-                        h = cst(h)
-                    acts.append(h)
-                return tuple(acts)
+            if gater is None:
+
+                def seg(params_tuple, h):
+                    acts = []
+                    for f, p in zip(fns, params_tuple):
+                        h = f(p, h)
+                        if cst is not None:
+                            h = cst(h)
+                        acts.append(h)
+                    return tuple(acts)
+
+            else:
+
+                def seg(params_tuple, thrs, h):
+                    alive = (
+                        jnp.ones(h.shape[:1], bool) if batched
+                        else jnp.asarray(True)
+                    )
+                    acts = []
+                    fired = []
+                    for i, (f, p) in enumerate(zip(fns, params_tuple)):
+                        y = f(p, h)
+                        if y.shape == h.shape and y.dtype == h.dtype:
+                            fire = alive & (conf_fn(h) < thrs[i])
+                            y = jnp.where(_gate_bcast(fire, y), y, h)
+                            if early:
+                                alive = fire
+                        else:
+                            fire = jnp.ones_like(alive)
+                        if cst is not None:
+                            y = cst(y)
+                        acts.append(y)
+                        fired.append(fire)
+                        h = y
+                    stacked_fired = (
+                        jnp.stack(fired) if fired
+                        else jnp.zeros(
+                            (0,) + (h.shape[:1] if batched else ()), bool
+                        )
+                    )
+                    return tuple(acts), stacked_fired
 
         compiled = jax.jit(seg) if self._jit else seg
         self._compiled_segment[key] = (compiled, mode)
@@ -815,10 +1023,18 @@ class TaskGraphExecutor:
                 task, cur, d + 1, batched, tuple(h.shape), jnp.result_type(h)
             )
             if mode == "scan":
-                acts = fn(self._stacked_segment_params(task, cur, d + 1), h)
-                acts = [acts[i] for i in range(d + 1 - cur)]
+                params = self._stacked_segment_params(task, cur, d + 1)
             else:
-                acts = fn(self._segment_params(task, cur, d + 1), h)
+                params = self._segment_params(task, cur, d + 1)
+            if self.gater is not None:
+                acts, fired = fn(
+                    params, self._suffix_thresholds(cur, d + 1), h
+                )
+                self._fired_frags.append((cur, fired))
+            else:
+                acts = fn(params, h)
+            if mode == "scan":
+                acts = [acts[i] for i in range(d + 1 - cur)]
             self.dispatch_count += 1
             for a, dd in zip(acts, range(cur, d + 1)):
                 self._activations[dd] = a
@@ -851,14 +1067,41 @@ class TaskGraphExecutor:
         }
         block_fn = self._block_fn_batch if batched else self._block_fn
         head_fn = self._head_fn_batch if batched else self._head_fn
+        gater = self.gater
+        if gater is not None:
+            conf_fn = (
+                jax.vmap(gater.confidence_fn) if batched
+                else gater.confidence_fn
+            )
+            thrs = gater.suffix_thresholds(resume, graph.depth)
+            alive = (
+                jnp.ones(h.shape[:1], bool) if batched else jnp.asarray(True)
+            )
+            fired: List[jnp.ndarray] = []
         for d in range(resume, graph.depth):
             node = path[d]
-            h = block_fn(d)(self._node_param(node), h)
+            y = block_fn(d)(self._node_param(node), h)
+            if gater is not None:
+                if y.shape == h.shape and y.dtype == h.dtype:
+                    fire = alive & (conf_fn(h) < thrs[d - resume])
+                    y = jnp.where(_gate_bcast(fire, y), y, h)
+                    if gater.mode == "early_exit":
+                        alive = fire
+                else:
+                    fire = jnp.ones_like(alive)
+                fired.append(fire)
+            h = y
             self.dispatch_count += 1
             self._activations[d] = h
             self._act_owner[d] = node
             if d in cuts and checkpoint_hook is not None:
                 checkpoint_hook(d)
+        if gater is not None:
+            stacked_fired = (
+                jnp.stack(fired) if fired
+                else jnp.zeros((0,) + (h.shape[:1] if batched else ()), bool)
+            )
+            self._fired_frags.append((resume, stacked_fired))
         out = head_fn(task)(self._head_param(task), h)
         self.dispatch_count += 1
         return out
@@ -873,6 +1116,7 @@ class TaskGraphExecutor:
         batched: bool,
         checkpoint_depths: Sequence[int] = (),
         checkpoint_hook: Optional[Callable[[int], None]] = None,
+        row_mask: Optional[Any] = None,
     ) -> jnp.ndarray:
         """Shared body of the single-request and batched task execution.
 
@@ -881,10 +1125,22 @@ class TaskGraphExecutor:
         scaling the per-request counters (flops/tasks), while load counters
         stay physical (once per invocation).  Accounting is dispatch-mode
         independent: the fused and per-block paths produce identical stats.
+
+        With a gater the per-block flop accounting is deferred until after
+        the dispatch: the realized fire masks are read back and each
+        executed block's flops split into ``flops_executed`` (rows that
+        fired) and ``flops_gated`` (rows whose gate skipped it).  Loads stay
+        physical and ungated — the scan program consumes every stacked
+        block's params regardless of who fires, so gating saves modelled
+        FLOPs, not weight traffic.  ``row_mask`` (batched only) marks which
+        rows of ``x`` are logically live — exactly ``weight`` of them; rows
+        outside the mask (padding, or rows a legacy per-request gate turned
+        off) execute physically but never count.
         """
         graph = self.program.graph
         path = graph.path(task)
         self._guard_act_shape(tuple(x.shape))
+        self._fired_frags = []
 
         # Deepest block of this task's path whose activation is cached.  The
         # task graph is a tree, so an owner match at depth ``d`` pins the
@@ -896,6 +1152,8 @@ class TaskGraphExecutor:
             if self._act_owner[d] == node and self._activations[d] is not None:
                 resume = d + 1
 
+        gated = self.gater is not None
+        executed_costs: List[BlockCost] = []
         for d in range(graph.depth):
             node = path[d]
             bc = self.program.block_costs[d]
@@ -920,7 +1178,10 @@ class TaskGraphExecutor:
                 # its input activation belongs to the current input.
                 stats.weight_bytes_skipped += bc.weight_bytes
             stats.blocks_executed += 1
-            stats.flops_executed += weight * bc.flops
+            if gated:
+                executed_costs.append(bc)
+            else:
+                stats.flops_executed += weight * bc.flops
         stats.tasks_run += weight
 
         h = self._activations[resume - 1] if resume > 0 else x
@@ -937,14 +1198,67 @@ class TaskGraphExecutor:
             ))
         if self._fused:
             if checkpoint_depths:
-                return self._run_suffix_segmented(
+                out = self._run_suffix_segmented(
                     task, resume, h, batched,
                     checkpoint_depths, checkpoint_hook,
                 )
-            return self._run_suffix_fused(task, resume, h, batched)
-        return self._run_suffix_blocks(
-            task, resume, h, batched, checkpoint_depths, checkpoint_hook
-        )
+            else:
+                out = self._run_suffix_fused(task, resume, h, batched)
+        else:
+            out = self._run_suffix_blocks(
+                task, resume, h, batched, checkpoint_depths, checkpoint_hook
+            )
+
+        if gated:
+            fired_rows = self._collect_fired(weight, batched, row_mask)
+            if len(fired_rows) != len(executed_costs):
+                raise AssertionError(
+                    f"gate readback covered {len(fired_rows)} blocks, "
+                    f"expected {len(executed_costs)}"
+                )
+            for bc, f in zip(executed_costs, fired_rows):
+                stats.flops_executed += f * bc.flops
+                stats.flops_gated += (weight - f) * bc.flops
+                stats.block_rows_fired += f
+                stats.block_rows_gated += weight - f
+            self.last_gate_record = TaskGateRecord(
+                task=task, weight=weight, fired=tuple(fired_rows),
+                resume=resume,
+            )
+        else:
+            self.last_gate_record = TaskGateRecord(
+                task=task, weight=weight, resume=resume
+            )
+        return out
+
+    def _collect_fired(
+        self, weight: int, batched: bool, row_mask: Optional[Any]
+    ) -> List[int]:
+        """Per executed block depth, how many live rows fired.
+
+        Reads back the dispatches' boolean fire masks (a device sync — the
+        price of realized-count accounting) and reduces them over the
+        logically-live rows: ``row_mask`` when given, else the first
+        ``weight`` rows (the scheduler pads at the tail), else the whole
+        single request.
+        """
+        mask = None if row_mask is None else np.asarray(row_mask, bool)
+        counts: List[int] = []
+        for _start, frag in self._fired_frags:
+            arr = np.asarray(frag)
+            if arr.shape[0] == 0:
+                continue
+            if not batched:
+                counts.extend(int(bool(v)) * weight for v in arr)
+            elif mask is not None:
+                counts.extend(
+                    int(np.count_nonzero(row & mask)) for row in arr
+                )
+            else:
+                counts.extend(
+                    int(np.count_nonzero(row[:weight])) for row in arr
+                )
+        return counts
 
     def run_task(
         self, task: int, x: jnp.ndarray, stats: ExecutionStats
@@ -974,11 +1288,14 @@ class TaskGraphExecutor:
         self.clear_activations()  # never resume from a previous input
         results: Dict[int, jnp.ndarray] = {}
         stats = ExecutionStats()
+        self.last_trace = []
         for t in order:
             if gate is not None and not gate(t, results):
                 stats.tasks_skipped += 1
+                self.last_trace.append(TaskGateRecord(task=t, weight=0))
                 continue
             results[t] = self.run_task(t, x, stats)
+            self.last_trace.append(self.last_gate_record)
         return results, stats
 
     # ---------------------------------------------------------------- batch
@@ -990,6 +1307,7 @@ class TaskGraphExecutor:
         weight: Optional[int] = None,
         checkpoint_depths: Sequence[int] = (),
         checkpoint_hook: Optional[Callable[[int], None]] = None,
+        row_mask: Optional[Any] = None,
     ) -> jnp.ndarray:
         """Run one task for a stacked request group ``xs``: ``(B, *sample)``.
 
@@ -1010,12 +1328,17 @@ class TaskGraphExecutor:
         (intermittent) dispatch: the suffix is cut at those block-depth
         boundaries and the hook fires after each cut with the activation
         freshly cached — see :meth:`_run_suffix_segmented`.
+
+        ``row_mask`` (optional ``(B,)`` bool) marks which rows are logically
+        live for adaptive fire accounting — exactly ``weight`` of them; see
+        :meth:`_run_task_impl`.
         """
         w = int(xs.shape[0]) if weight is None else int(weight)
         return self._run_task_impl(
             task, xs, stats, w, batched=True,
             checkpoint_depths=checkpoint_depths,
             checkpoint_hook=checkpoint_hook,
+            row_mask=row_mask,
         )
 
     def run_batch(
@@ -1050,11 +1373,14 @@ class TaskGraphExecutor:
         v = int(xs.shape[0]) if valid is None else int(valid)
         results: Dict[int, jnp.ndarray] = {}
         stats = ExecutionStats()
+        self.last_trace = []
         for t in order:
             if gate is not None and not gate(t, results):
                 stats.tasks_skipped += v
+                self.last_trace.append(TaskGateRecord(task=t, weight=0))
                 continue
             results[t] = self.run_task_batch(t, xs, stats, weight=v)
+            self.last_trace.append(self.last_gate_record)
         return results, stats
 
     # ------------------------------------------- collective calibration
@@ -1106,7 +1432,7 @@ class TaskGraphExecutor:
                 "path (jit_blocks=True, fused=True)"
             )
         shape, dtype = tuple(shape), jnp.dtype(dtype)
-        key = (task, resume, batched, shape, dtype)
+        key = (task, resume, batched, shape, dtype, self._gate_key())
         if key not in self._suffix_hlo:
             fn, mode = self._fused_fn(task, resume, batched, shape, dtype)
             params = (
@@ -1120,7 +1446,15 @@ class TaskGraphExecutor:
                 )
             else:
                 in_sds = jax.ShapeDtypeStruct(shape, dtype)
-            lowered = fn.lower(params, self._head_param(task), in_sds)
+            if self.gater is not None:
+                thrs_sds = jax.ShapeDtypeStruct(
+                    (self.program.graph.depth - resume,), jnp.float32
+                )
+                lowered = fn.lower(
+                    params, thrs_sds, self._head_param(task), in_sds
+                )
+            else:
+                lowered = fn.lower(params, self._head_param(task), in_sds)
             self._suffix_hlo[key] = lowered.compile().as_text()
         return self._suffix_hlo[key]
 
@@ -1154,7 +1488,7 @@ class TaskGraphExecutor:
         ``session.stats == session.predicted`` exact on a mesh.
         """
         shape, dtype = tuple(shape), jnp.dtype(dtype)
-        key = (task, resume, batched, shape, dtype)
+        key = (task, resume, batched, shape, dtype, self._gate_key())
         if key not in self._coll_bytes:
             from repro.launch.hlo_cost import collective_breakdown
 

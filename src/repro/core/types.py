@@ -174,6 +174,18 @@ class ExecutionStats:
     # Zero on engines without a journal.
     checkpoint_bytes: float = 0.0
     checkpoint_seconds: float = 0.0
+    # Input-adaptive gating counters (``repro.adaptive``): per-(block, row)
+    # fire/skip tallies of confidence-gated fused suffixes and the modelled
+    # FLOPs the gated-off rows saved.  ``flops_executed`` counts only the
+    # rows that actually fired, so modelled time/energy reflect the gating;
+    # ``flops_gated`` is the remainder vs the all-blocks floor.  Floats (not
+    # ints) because *expected* predictions under a ``GateModel`` are
+    # fractional; realized counters are whole numbers of the same fields, so
+    # realized-vs-predicted equality still compares exactly.  Zero on
+    # engines without an ``AdaptivePolicy``.
+    block_rows_fired: float = 0.0
+    block_rows_gated: float = 0.0
+    flops_gated: float = 0.0
 
     @property
     def collective_bytes(self) -> float:
@@ -277,4 +289,39 @@ class ExecutionStats:
             checkpoint_seconds=(
                 self.checkpoint_seconds + other.checkpoint_seconds
             ),
+            block_rows_fired=self.block_rows_fired + other.block_rows_fired,
+            block_rows_gated=self.block_rows_gated + other.block_rows_gated,
+            flops_gated=self.flops_gated + other.flops_gated,
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGateRecord:
+    """One task's realized gate outcome inside a group's execution.
+
+    The executor emits one record per task in the group's effective order
+    (``TaskGraphExecutor.last_trace``); the cost model replays the same
+    records (``GraphCostModel.predicted_stats(..., gate_trace=...)``) so the
+    realized-conditional prediction stays field-exact under gating.
+
+    Attributes:
+      task: task id.
+      weight: rows of the batch this task ran for (0 = the task's legacy
+        ``gate=`` callback skipped it for the whole group — the executor
+        never dispatched it, so replay must not advance residency or the
+        activation cache past it).
+      fired: per executed block depth (``resume`` .. ``depth-1``), how many
+        of the ``weight`` rows the adaptive gate let through.  ``None``
+        means no adaptive gater: every executed block fired for all rows.
+      resume: the activation-resume depth the executor actually used, when
+        the emitter knows it (cross-checked against the replay walk).
+      offered: rows of the batch the task was *offered* (the group's valid
+        count) before any legacy gate — what ``GateModelCalibrator`` uses
+        as the denominator of the task fire probability.
+    """
+
+    task: int
+    weight: int
+    fired: Optional[Tuple[int, ...]] = None
+    resume: Optional[int] = None
+    offered: Optional[int] = None

@@ -18,7 +18,14 @@ write-ahead ``Journal`` + ``ServingSession.recover``) and
 ``repro.serving.reliability`` (``PowerFailure`` / ``PowerFailureInjector``
 for whole-session power loss, ``EnergyBudget`` for duty-cycled
 energy-harvesting execution).
+
+Input-adaptive serving lives in ``repro.adaptive`` (``AdaptivePolicy`` /
+``BlockGater`` / ``GateModel``; re-exported here for convenience): set
+``EnginePolicy.adaptive`` and the engine gates per-row block execution on
+confidence inside the fused suffixes, predicts and plans with *expected*
+counters, and walks the policy's deadline ladder per group.
 """
+from repro.adaptive import AdaptivePolicy, BlockGater, GateModel
 from repro.serving.batching import (
     ContinuousBatcher, GenRequest, GenResult, RequestGroup,
     RequestGroupScheduler, effective_order, normalize_subset, order_groups,
@@ -54,6 +61,10 @@ __all__ = [
     "MultitaskFuture",
     "AdmissionQueue",
     "PendingRequest",
+    # input-adaptive serving (re-exported from repro.adaptive)
+    "AdaptivePolicy",
+    "BlockGater",
+    "GateModel",
     # policies
     "EnginePolicy",
     "SchedulingPolicy",

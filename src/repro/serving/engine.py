@@ -24,11 +24,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adaptive.gate_model import GateModel, GateModelCalibrator
+from repro.adaptive.gating import BlockGater
+from repro.adaptive.policy import AdaptivePolicy
 from repro.core.constraints import Constraints
 from repro.core.cost_model import CheckpointSite, GraphCostModel
 from repro.core.executor import MultitaskProgram, TaskGraphExecutor
 from repro.core.ordering import optimal_order, solve_suborder
-from repro.core.types import ExecutionStats, HardwareModel, TPU_V5E
+from repro.core.types import (
+    ExecutionStats, HardwareModel, TPU_V5E, TaskGateRecord,
+)
 from repro.models.registry import ModelApi
 from repro.serving.batching import (
     RequestGroup, RequestGroupScheduler, effective_order, normalize_subset,
@@ -136,10 +141,18 @@ class GroupExecution:
 
     ``outputs`` holds the per-slot (valid rows only) task outputs;
     ``stats`` the executed counters of this group alone; ``predicted`` the
-    cost model's all-gates-fire prediction for the same group computed from
-    the executor's residency immediately before execution (the incremental
-    form of ``predicted_group_stats`` — merging the per-group predictions
-    of a schedule equals the one-shot prediction of the whole schedule).
+    cost model's prediction for the same group computed from the executor's
+    residency immediately before execution (the incremental form of
+    ``predicted_group_stats`` — merging the per-group predictions of a
+    schedule equals the one-shot prediction of the whole schedule).
+    ``predicted`` is conditioned on ``gate_trace``, the realized per-task
+    gate outcomes of the execution (legacy ``gate=`` skips and adaptive
+    per-block fire counts), which is what keeps ``stats == predicted``
+    field-exact even for gated/adaptive groups.  ``expected`` is the
+    *a-priori* expected-counter prediction under the engine's
+    :class:`~repro.adaptive.gate_model.GateModel` — computed before
+    execution, without peeking at the trace — or ``None`` when the engine
+    is not adaptive.
     """
 
     group: RequestGroup
@@ -148,6 +161,8 @@ class GroupExecution:
     stats: ExecutionStats
     predicted: ExecutionStats
     warm_saved: float
+    expected: Optional[ExecutionStats] = None
+    gate_trace: Optional[List[TaskGateRecord]] = None
 
 
 class MultitaskEngine:
@@ -172,6 +187,13 @@ class MultitaskEngine:
       group runs (see :meth:`plan_groups`).
     * ``policy.scheduling`` is the admission policy sessions (and the
       one-shot wrappers' internal sessions) run under.
+    * ``policy.adaptive`` turns on input-adaptive execution: the executor
+      gains a per-row confidence gater (early exit / per-block gating
+      inside the fused suffixes), the cost model an expected-counter gate
+      model the order solvers optimize, and sessions a deadline-ladder
+      threshold knob.  ``gate_deps`` (or conditional constraint edges)
+      declare which outputs each legacy runtime gate reads, which makes
+      per-plan order re-solving sound for gated engines.
 
     None of these change results, only how much gets loaded.  The
     ``warm_start`` / ``group_ordering`` / ``scheduler`` keyword arguments
@@ -189,6 +211,7 @@ class MultitaskEngine:
         constraints: Optional[Constraints] = None,
         hw: HardwareModel = TPU_V5E,
         gates: Optional[Dict[int, Callable[[Dict[int, jax.Array]], bool]]] = None,
+        gate_deps: Optional[Dict[int, Sequence[int]]] = None,
         order: Optional[Sequence[int]] = None,
         scheduler: Optional[RequestGroupScheduler] = None,
         warm_start: Optional[bool] = None,
@@ -247,19 +270,76 @@ class MultitaskEngine:
                 "staged prefetch — nothing could ever stream"
             )
         self.policy = policy
+        # -------------------------------------------- input-adaptive gating
+        self.adaptive: Optional[AdaptivePolicy] = policy.adaptive
+        self._gater: Optional[BlockGater] = None
+        self._calibrator: Optional[GateModelCalibrator] = None
+        if self.adaptive is not None:
+            self._gater = BlockGater(
+                confidence_fn=self.adaptive.confidence,
+                mode=self.adaptive.mode,
+                threshold=float(self.adaptive.threshold),
+                min_blocks=self.adaptive.min_blocks,
+            )
+            if self.adaptive.calibrate_online:
+                self._calibrator = GateModelCalibrator()
+        # Which tasks each runtime gate reads: {gated_task: (input_tasks,)}.
+        # Declared deps make gates safe under per-plan order re-solving (the
+        # inputs become precedence edges of the re-solve).  When not given
+        # explicitly, derived from the conditional constraint edges — the
+        # paper's gates *are* conditional constraints acted on at runtime.
+        self.gate_deps: Dict[int, Tuple[int, ...]] = {}
+        if gate_deps is not None:
+            self.gate_deps = {
+                int(t): tuple(int(i) for i in deps)
+                for t, deps in gate_deps.items()
+            }
+        elif constraints is not None and self.gates:
+            for t in self.gates:
+                deps = tuple(sorted(
+                    i for (i, j, _p) in constraints.conditional if j == t
+                ))
+                if deps:
+                    self.gate_deps[t] = deps
+        self._plan_constraints = self._build_plan_constraints(
+            program.graph.num_tasks, constraints
+        )
         self.cost_model = GraphCostModel(
             program.graph, program.block_costs, hw,
             weight_shards=self.weight_shards,
+            gate_model=(
+                self.adaptive.gate_model if self.adaptive is not None else None
+            ),
         )
         self._cost_matrix = self.cost_model.cost_matrix()
+        # Lazy per-plan re-solve matrix (expected costs when a gate model or
+        # conditional constraints exist); dirtied by online calibration.
+        self._resolve_mat: Optional[np.ndarray] = None
         if order is None:
-            res = optimal_order(self._cost_matrix, constraints)
+            # optimal_order applies the Eq.-8 conditional weighting itself,
+            # so the matrix folds in only the *adaptive* gate model here —
+            # folding the constraints' probabilities too would double-count.
+            init_matrix = (
+                self.cost_model.expected_cost_matrix()
+                if self.cost_model.gate_model is not None
+                else self._cost_matrix
+            )
+            res = optimal_order(init_matrix, constraints)
             order = res.order
         self.order = tuple(order)
         if constraints is not None and not constraints.is_valid_order(self.order):
             raise ValueError("supplied order violates the constraints")
+        if (
+            self._plan_constraints is not None
+            and not self._plan_constraints.is_valid_order(self.order)
+        ):
+            raise ValueError(
+                "gate_deps edges conflict with the engine's task order: a "
+                "gate would read an output its order produces later"
+            )
         self.executor = TaskGraphExecutor(
-            program, mesh=self.mesh, sharding=self.sharding
+            program, mesh=self.mesh, sharding=self.sharding,
+            gater=self._gater,
         )
         # Deterministic chaos hook (see repro.serving.reliability): when
         # set, ``check`` is called at the plan/load/dispatch boundaries and
@@ -326,6 +406,59 @@ class MultitaskEngine:
         return ServingSession(self, policy=policy, clock=clock, **kwargs)
 
     # ------------------------------------------------------------- planning
+    def _build_plan_constraints(
+        self, num_tasks: int, constraints: Optional[Constraints]
+    ) -> Optional[Constraints]:
+        """Constraints for per-plan re-solving: the engine's own, plus one
+        precedence edge per declared gate input so a re-solved order can
+        never move a gated task ahead of an output its gate reads."""
+        edges = {
+            (i, t) for t, deps in self.gate_deps.items() for i in deps
+        }
+        base = constraints.precedence if constraints is not None else frozenset()
+        if not (edges - set(base)):
+            return constraints
+        return Constraints.make(
+            num_tasks,
+            precedence=set(base) | edges,
+            conditional=(
+                constraints.conditional if constraints is not None else ()
+            ),
+        )
+
+    def _planning_gate_model(self) -> Optional[GateModel]:
+        """The gate model per-plan re-solves price costs with.
+
+        ``solve_suborder`` rebuilds precedence-only constraints, so the
+        conditional constraints' Eq.-8 execution probabilities would be
+        dropped on the floor — fold them into the gate model's task
+        probabilities instead.  A *calibrated* (adaptive) task probability
+        wins over the constraints' prior where both exist: it is the same
+        quantity, measured rather than assumed.
+        """
+        gm = self.cost_model.gate_model
+        if self.constraints is None or not self.constraints.conditional:
+            return gm
+        cgm = GateModel.from_constraints(self.constraints)
+        if gm is None:
+            return cgm
+        task_fire = dict(cgm.task_fire)
+        task_fire.update(gm.task_fire)
+        return GateModel(fire=dict(gm.fire), task_fire=task_fire)
+
+    def _resolve_matrix(self) -> np.ndarray:
+        """Switching-cost matrix for per-plan re-solving: expected costs
+        when any probability surface exists (adaptive gate model and/or
+        conditional constraints), the exact matrix otherwise.  Cached;
+        online calibration dirties the cache."""
+        if self._resolve_mat is None:
+            gm = self._planning_gate_model()
+            self._resolve_mat = (
+                self.cost_model.expected_cost_matrix(gm)
+                if gm is not None else self._cost_matrix
+            )
+        return self._resolve_mat
+
     def plan_groups(
         self, requests: Sequence[MultitaskRequest]
     ) -> List[RequestGroup]:
@@ -356,19 +489,18 @@ class MultitaskEngine:
                 if use_order and self.warm_start else None
             ),
         )
-        if (
-            self.policy.resolve_order_per_plan
-            and not self.gates
-            and not (self.constraints is not None
-                     and self.constraints.conditional)
+        if self.policy.resolve_order_per_plan and all(
+            t in self.gate_deps for t in self.gates
         ):
             # Gates are order-sensitive (a gate reads the outputs produced
-            # so far), so re-solving is only sound for ungated engines; and
-            # solve_suborder optimizes the unweighted objective (Eq. 7), so
-            # engines whose global order was solved under conditional
-            # execution probabilities (Eq. 8) keep it — a p-blind re-solve
-            # could pick a costlier order for probability-weighted
-            # workloads.
+            # so far), so re-solving requires every gate's inputs to be
+            # declared (gate_deps) — they become precedence edges of the
+            # re-solve, which keeps each gate's inputs ahead of it in any
+            # solved order.  Conditional-probability constraints and
+            # adaptive gate models are handled by pricing the re-solve with
+            # the *expected* cost matrix (see _resolve_matrix), so the
+            # per-plan orders optimize the same probability-weighted
+            # objective (Eq. 8) as the global solve.
             groups = self._resolve_plan_orders(groups)
         return groups
 
@@ -411,16 +543,21 @@ class MultitaskEngine:
             self.executor.residency_state() if self.warm_start
             else (None,) * depth
         )
+        matrix = self._resolve_matrix()
+        gm = self._planning_gate_model()
         out: List[RequestGroup] = []
         for group in groups:
             eff = effective_order(self.order, group.tasks)
             if len(eff) > 1:
                 start = [
-                    self.cost_model.resume_load_cost(resident, t) for t in eff
+                    self.cost_model.expected_resume_load_cost(
+                        resident, t, gate_model=gm
+                    )
+                    for t in eff
                 ]
                 solved = solve_suborder(
-                    self._cost_matrix, eff,
-                    start_costs=start, constraints=self.constraints,
+                    matrix, eff,
+                    start_costs=start, constraints=self._plan_constraints,
                 )
                 group = dataclasses.replace(group, order=tuple(solved))
             out.append(group)
@@ -463,6 +600,39 @@ class MultitaskEngine:
             )
         return predictor.stats
 
+    def expected_group_stats(
+        self, groups: Sequence[RequestGroup]
+    ) -> ExecutionStats:
+        """Expected-counter analogue of :meth:`predicted_group_stats`:
+        FLOP/task counters weighted by the cost model's gate model (fire
+        and task-execution probabilities) instead of the all-gates-fire
+        floor.  With no gate model this equals
+        :meth:`predicted_group_stats` exactly; with a calibrated one it is
+        the mean the realized counters converge to over traffic drawn from
+        the calibration distribution."""
+        predictor = self.cost_model.plan_predictor(
+            resume=(
+                self.executor.residency_state() if self.warm_start else None
+            ),
+            carry_residency=self.warm_start,
+        )
+        gm = (
+            (self.cost_model.gate_model or GateModel())
+            if self.adaptive is not None else None
+        )
+        for g in groups:
+            eff = self.group_order(g)
+            predictor.append(
+                eff, batch_size=g.valid,
+                extra_tasks_skipped=(len(self.order) - len(eff)) * g.valid,
+                collectives=(
+                    self.executor.collective_view(g.xs)
+                    if self.mesh is not None else None
+                ),
+                gate_model=gm,
+            )
+        return predictor.expected
+
     # ------------------------------------------------------------ execution
     def _inject(self, site: str, **context: Any) -> None:
         """Fault-injection hook: delegates to :attr:`fault_injector` when
@@ -488,7 +658,8 @@ class MultitaskEngine:
         executor: Optional[TaskGraphExecutor] = None,
         intermittent: Optional[IntermittentContext] = None,
         ckpt_plan: Optional[Sequence["CheckpointSite"]] = None,
-    ) -> Tuple[List[Dict[int, jax.Array]], ExecutionStats]:
+    ) -> Tuple[List[Dict[int, jax.Array]], ExecutionStats,
+               List[TaskGateRecord]]:
         """Execute one homogeneous request group through the batched path.
 
         ``eff`` is the group's execution order (see :meth:`group_order`);
@@ -504,18 +675,30 @@ class MultitaskEngine:
         suffix of later tasks for *every* row, so the group can legitimately
         account fewer executed flops than the sum of solo serves — batching
         does strictly less work there.
+
+        The third return value is the group's realized gate trace: one
+        :class:`~repro.core.types.TaskGateRecord` per task of ``eff``, in
+        execution order — weight-0 records for tasks every row's gate
+        skipped, per-block fired-row counts when the executor carries an
+        adaptive gater.  ``offered`` is always the group's valid count, so
+        the trace is what :class:`~repro.adaptive.gate_model.\
+GateModelCalibrator` consumes and what
+        ``GraphCostModel.predicted_stats(..., gate_trace=...)`` replays to
+        reproduce ``stats`` field-exactly.
         """
         ex = executor if executor is not None else self.executor
         v = group.valid
         per_request: List[Dict[int, jax.Array]] = [dict() for _ in range(v)]
         stats = ExecutionStats()
         stats.tasks_skipped += (len(self.order) - len(eff)) * v
+        trace: List[TaskGateRecord] = []
         for t in eff:
             g = self.gates.get(t)
             fire = [True] * v if g is None else [bool(g(per_request[i])) for i in range(v)]
             fired = sum(fire)
             stats.tasks_skipped += v - fired
             if fired == 0:
+                trace.append(TaskGateRecord(task=t, weight=0, offered=v))
                 continue
             self._inject("dispatch", task=t, group_tasks=group.tasks)
             if intermittent is not None:
@@ -526,6 +709,12 @@ class MultitaskEngine:
                     "group", task=t, group_id=intermittent.group_id,
                     group_tasks=group.tasks, stats=stats,
                 )
+            row_mask = None
+            if ex.gater is not None:
+                # Realized-fire accounting must ignore padded rows and rows
+                # whose legacy gate kept them out of this task.
+                row_mask = np.zeros(int(group.xs.shape[0]), dtype=bool)
+                row_mask[:v] = fire
             sites = [s for s in (ckpt_plan or ()) if s.task == t]
             if sites and intermittent is not None:
                 hook = self._checkpoint_hook(
@@ -534,14 +723,20 @@ class MultitaskEngine:
                 out = ex.run_task_batch(
                     t, group.xs, stats, weight=fired,
                     checkpoint_depths=[s.depth for s in sites],
-                    checkpoint_hook=hook,
+                    checkpoint_hook=hook, row_mask=row_mask,
                 )
             else:
-                out = ex.run_task_batch(t, group.xs, stats, weight=fired)
+                out = ex.run_task_batch(
+                    t, group.xs, stats, weight=fired, row_mask=row_mask
+                )
+            if ex.last_gate_record is not None:
+                trace.append(dataclasses.replace(
+                    ex.last_gate_record, offered=v
+                ))
             for i in range(v):
                 if fire[i]:
                     per_request[i][t] = out[i]
-        return per_request, stats
+        return per_request, stats, trace
 
     def _checkpoint_hook(
         self,
@@ -629,6 +824,7 @@ class MultitaskEngine:
         intermittent: Optional[IntermittentContext] = None,
         first_task_resume: int = 0,
         keep_activations: bool = False,
+        adaptive_threshold: Optional[float] = None,
     ) -> GroupExecution:
         """Run one planned group; the session's execution primitive.
 
@@ -639,6 +835,19 @@ class MultitaskEngine:
         returns everything a response needs — without building responses,
         so the session can defer future resolution behind the next group's
         planning.
+
+        The counter prediction is computed *after* execution, conditioned
+        on the realized gate trace — it still uses only the pre-execution
+        residency (captured before the run), so the incremental-prediction
+        contract is unchanged, and for ungated non-adaptive engines the
+        trace is all-fire and the result is identical to the historical
+        pre-execution prediction.  An adaptive engine additionally computes
+        ``expected``, the a-priori expected-counter prediction under the
+        cost model's gate model, *before* the run (it must not peek).
+
+        ``adaptive_threshold`` overrides the gater's confidence threshold
+        for this group (the session's deadline-ladder rung); thresholds are
+        runtime scan inputs, so this never retraces a compiled program.
 
         ``intermittent`` (journal + group id) selects the power-failure-
         atomic path: the cost model places mid-suffix checkpoints
@@ -668,51 +877,99 @@ class MultitaskEngine:
                 eff, batch_size=group.valid,
                 first_task_resume=first_task_resume,
             )
+        if self._gater is not None and adaptive_threshold is not None:
+            self._gater.threshold = float(adaptive_threshold)
+        expected: Optional[ExecutionStats] = None
+        if self.adaptive is not None:
+            # A-priori expected counters — computed before the run so it
+            # provably never peeks at realized gate outcomes.  An
+            # uncalibrated engine uses the *empty* gate model (all fire
+            # probabilities 1.0) rather than none at all, so the fire-row
+            # counters are present and the expectation degrades to the
+            # all-blocks floor instead of to the non-adaptive prediction.
+            expected = self.cost_model.expected_stats(
+                eff, batch_size=group.valid, resume=resume,
+                collectives=self.executor.collective_view(group.xs),
+                first_task_resume=first_task_resume,
+                checkpoints=ckpt_plan,
+                gate_model=self.cost_model.gate_model or GateModel(),
+            )
+            expected.tasks_skipped += (
+                (len(self.order) - len(eff)) * group.valid
+            )
+        streamer = self.executor.streamer
+        # Snapshot the stream state before the run consumes staged copies.
+        staged = streamer.staged_nodes()
+        pending_stall = streamer.pending_stall_seconds
+        self._inject("load", group_tasks=group.tasks, resume=resume)
+        per_request, stats, trace = self._run_group(
+            group, eff, intermittent=intermittent, ckpt_plan=ckpt_plan
+        )
+        stats.stream_stall_seconds += streamer.finish_group()
+        # Realized-conditional prediction: replay the gate trace over the
+        # *pre-execution* residency.  All-fire traces reproduce the
+        # historical pre-execution prediction bit for bit; gated/adaptive
+        # traces keep ``stats == predicted`` field-exact.
         predicted = self.cost_model.predicted_stats(
             eff, batch_size=group.valid, resume=resume,
             collectives=self.executor.collective_view(group.xs),
             first_task_resume=first_task_resume,
             checkpoints=ckpt_plan,
+            gate_trace=trace,
         )
         warm_saved = 0.0
         if self.warm_start:
             # Collectives are resume-independent (they key on the intra-order
             # shared prefix), and warm_saved only reads the load counter —
-            # the cold reference needs no collective terms.
+            # the cold reference needs no collective terms.  It DOES need
+            # ``first_task_resume``: the trace's resume depths come from the
+            # executed walk, and a crash-recovered group resumed mid-suffix
+            # — a cold-from-0 walk would reject its trace as divergent.
             cold_pred = self.cost_model.predicted_stats(
-                eff, batch_size=group.valid
+                eff, batch_size=group.valid, gate_trace=trace,
+                first_task_resume=first_task_resume,
             )
             warm_saved = (
                 cold_pred.weight_bytes_loaded - predicted.weight_bytes_loaded
             )
-        streamer = self.executor.streamer
-        staged = streamer.staged_nodes()
         if staged:
-            # A prefetched group: the loads that will hit staged copies
-            # arrive over the stream, so predict them as prefetched plus
-            # the staged batch's modelled stall.  For an ungated engine the
+            # A prefetched group: the loads that hit staged copies arrived
+            # over the stream, so predict them as prefetched plus the
+            # staged batch's modelled stall.  For an ungated engine the
             # staged set *is* the load set (prefetch_group planned it from
-            # the same residency), making this exact by construction.
+            # the same residency), making this exact by construction; a
+            # legacy gate that skipped a whole task drops its staged-but-
+            # unused loads from both sides via the trace.
             pf_bytes = sum(
                 self.program.block_costs[d].weight_bytes
-                for d, node in self.cost_model.plan_loads(eff, resume)
+                for d, node in self.cost_model.plan_loads(
+                    eff, resume, gate_trace=trace
+                )
                 if node in staged
             )
             if pf_bytes > 0.0:
                 predicted.prefetched_bytes = pf_bytes
-                predicted.stream_stall_seconds = streamer.pending_stall_seconds
+                predicted.stream_stall_seconds = pending_stall
         predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
-        self._inject("load", group_tasks=group.tasks, resume=resume)
-        per_request, stats = self._run_group(
-            group, eff, intermittent=intermittent, ckpt_plan=ckpt_plan
-        )
-        stats.stream_stall_seconds += streamer.finish_group()
+        if self._calibrator is not None:
+            # Online calibration: fold this group's realized trace into the
+            # gate model so expected-cost planning tracks traffic drift.
+            self._calibrator.observe(trace)
+            self.cost_model = dataclasses.replace(
+                self.cost_model, gate_model=self._calibrator.model()
+            )
+            self._resolve_mat = None
         return GroupExecution(
             group=group, eff=eff, outputs=per_request, stats=stats,
             predicted=predicted, warm_saved=warm_saved,
+            expected=expected, gate_trace=trace,
         )
 
-    def execute_group_fallback(self, group: RequestGroup) -> GroupExecution:
+    def execute_group_fallback(
+        self,
+        group: RequestGroup,
+        adaptive_threshold: Optional[float] = None,
+    ) -> GroupExecution:
         """Degradation-ladder rung for mesh engines: run ``group`` cold on a
         lazily built single-device executor.
 
@@ -727,18 +984,34 @@ class MultitaskEngine:
         group's incremental prediction.
         """
         if self._fallback_executor is None:
-            self._fallback_executor = TaskGraphExecutor(self.program)
+            # Shares the engine's gater (same threshold/mode object), so a
+            # degraded adaptive run gates identically to the primary path.
+            self._fallback_executor = TaskGraphExecutor(
+                self.program, gater=self._gater
+            )
         ex = self._fallback_executor
         ex.reset()
+        if self._gater is not None and adaptive_threshold is not None:
+            self._gater.threshold = float(adaptive_threshold)
         eff = self.group_order(group)
+        expected: Optional[ExecutionStats] = None
+        if self.adaptive is not None:
+            expected = self.cost_model.expected_stats(
+                eff, batch_size=group.valid,
+                gate_model=self.cost_model.gate_model or GateModel(),
+            )
+            expected.tasks_skipped += (
+                (len(self.order) - len(eff)) * group.valid
+            )
+        per_request, stats, trace = self._run_group(group, eff, executor=ex)
         predicted = self.cost_model.predicted_stats(
-            eff, batch_size=group.valid
+            eff, batch_size=group.valid, gate_trace=trace
         )
         predicted.tasks_skipped += (len(self.order) - len(eff)) * group.valid
-        per_request, stats = self._run_group(group, eff, executor=ex)
         return GroupExecution(
             group=group, eff=eff, outputs=per_request, stats=stats,
             predicted=predicted, warm_saved=0.0,
+            expected=expected, gate_trace=trace,
         )
 
     def _group_responses(

@@ -312,11 +312,19 @@ class EnginePolicy:
       resolve_order_per_plan: re-solve each planned group's internal task
         order (``ordering.solve_suborder``) seeded with the residency the
         engine will actually have when the group runs, instead of using the
-        cold global order filtered to the group's subset.  Ignored when the
-        engine has runtime gates (gate semantics are order-sensitive) or
-        conditional-probability constraints (the re-solve optimizes the
-        unweighted objective and could undo the probability-weighted
-        global solve).
+        cold global order filtered to the group's subset.  Runtime gates
+        are order-sensitive (a gate reads the outputs produced so far), so
+        the re-solve only runs when every gated task's inputs are declared
+        — via ``MultitaskEngine(gate_deps=...)`` or derived from the
+        conditional constraint edges — in which case those inputs become
+        precedence edges of the re-solve and gating semantics are
+        preserved.  Conditional-probability constraints no longer disable
+        the re-solve: the engine re-solves over the *expected* cost matrix
+        (``GraphCostModel.expected_cost_matrix`` with the constraints'
+        Eq.-8 execution probabilities folded into a
+        :class:`~repro.adaptive.gate_model.GateModel`), so per-plan orders
+        optimize the same probability-weighted objective as the global
+        solve instead of a p-blind proxy.
       scheduling: the session admission policy; the one-shot entry points
         (``serve`` / ``serve_batch``) run their internal session under it.
       scheduler: the request-group scheduler (bucketing / padding shapes);
@@ -343,6 +351,17 @@ class EnginePolicy:
         and byte counters are unchanged, and ``session.stats ==
         session.predicted`` stays exact.  Requires ``warm_start`` (a cold
         reset before every group would cancel every prefetch).
+      adaptive: optional :class:`~repro.adaptive.policy.AdaptivePolicy`
+        turning on input-adaptive execution: the engine builds a
+        per-row confidence :class:`~repro.adaptive.gating.BlockGater` for
+        the executor (early exit / per-block gating inside fused
+        suffixes), seeds the cost model's expected-counter
+        :class:`~repro.adaptive.gate_model.GateModel`, solves task orders
+        against *expected* switching costs, and lets sessions walk the
+        policy's deadline ladder to pick each group's confidence
+        threshold.  ``session.stats == session.predicted`` stays exact
+        (prediction replays the realized gate trace);
+        ``session.expected`` carries the a-priori expected prediction.
 
     The defaults reproduce the pre-session engine exactly: greedy one-shot
     admission, warm starts, cost-aware group ordering, global task order,
@@ -359,3 +378,4 @@ class EnginePolicy:
     mesh: Optional[Any] = None
     sharding: Optional[ShardingPolicy] = None
     streaming: bool = False
+    adaptive: Optional[Any] = None

@@ -24,8 +24,20 @@ they can overlap and be controlled independently:
 ``session.stats`` accumulates the executed counters and
 ``session.predicted`` the cost model's incremental prediction (each group
 predicted from the executor's actual residency right before it runs — the
-incremental form of ``predicted_group_stats``).  With no gates the two are
-equal, field for field, which the property tests assert.  On a mesh-sharded
+incremental form of ``predicted_group_stats``).  The prediction is
+conditioned on each group's *realized gate trace* (legacy ``gate=`` skips
+and adaptive per-block fire counts, replayed over the pre-execution
+residency), so the two are equal field for field — for ungated, gated, and
+input-adaptive engines alike — which the property tests assert.
+``session.expected`` accumulates the *a-priori* expected prediction
+instead: counters weighted by the engine's
+:class:`~repro.adaptive.gate_model.GateModel` probabilities, computed
+before each group runs; on a non-adaptive engine it simply equals
+``session.predicted``.  An adaptive engine whose policy carries a deadline
+``ladder`` additionally picks each group's confidence threshold from the
+group's worst remaining deadline slack (more slack -> a tighter threshold
+-> more early exits), trading accuracy headroom for energy exactly where
+the SLOs allow it.  On a mesh-sharded
 engine (``EnginePolicy.mesh``) both sides include the per-kind collective
 bytes of every fused-suffix dispatch — calibrated once from the lowered
 HLO, added identically to counters and prediction — so the equality extends
@@ -377,7 +389,8 @@ class ServingSession:
         self._seq = 0
         # ------------------------------------------------- running counters
         self.stats = ExecutionStats()       # executed, cumulative
-        self.predicted = ExecutionStats()   # all-gates-fire prediction
+        self.predicted = ExecutionStats()   # realized-trace prediction
+        self.expected = ExecutionStats()    # a-priori expected prediction
         self.requests_submitted = 0
         self.requests_admitted = 0
         self.requests_rejected = 0
@@ -677,7 +690,8 @@ class ServingSession:
                     # this group's non-resident weights behind them.
                     self._prefetch(group)
                 execution, retries, degraded = self._run_group_guarded(
-                    group, members, group_id)
+                    group, members, group_id,
+                    adaptive_threshold=self._ladder_threshold(members, now))
                 if execution is None:
                     # Ladder exhausted; members already failed.  No window
                     # survives a failed group — the next prefetch would
@@ -697,6 +711,10 @@ class ServingSession:
                     self.energy.drain(min(spent, self.energy.available))
                 self.stats = self.stats.merge(execution.stats)
                 self.predicted = self.predicted.merge(execution.predicted)
+                self.expected = self.expected.merge(
+                    execution.expected if execution.expected is not None
+                    else execution.predicted
+                )
                 if self.journal is not None:
                     # Atomic commit: outputs + counters + the residency the
                     # group leaves behind, in one durable record.  Futures
@@ -803,12 +821,32 @@ class ServingSession:
             self.prefetches_issued += 1
             self.prefetch_scheduled_bytes += scheduled
 
+    # --------------------------------------------- adaptive accuracy ladder
+    def _ladder_threshold(
+        self, members: Tuple[PendingRequest, ...], now: float
+    ) -> Optional[float]:
+        """The confidence threshold this group earns from its deadline room.
+
+        ``None`` (keep the gater's base threshold) unless the engine is
+        adaptive *and* its policy carries a ladder.  The group is scored by
+        its *worst* member: the minimum remaining slack over members with
+        deadlines (a group is as urgent as its most urgent request);
+        all-deadline-free groups look up the ladder with ``None`` and get
+        the base threshold.
+        """
+        adaptive = self.engine.adaptive
+        if adaptive is None or not adaptive.ladder:
+            return None
+        slacks = [p.slack(now) for p in members if p.deadline is not None]
+        return adaptive.threshold_for_slack(min(slacks) if slacks else None)
+
     # ------------------------------------------------- failure recovery
     def _run_group_guarded(
         self,
         group,
         members: Tuple[PendingRequest, ...],
         group_id: int,
+        adaptive_threshold: Optional[float] = None,
     ) -> Tuple[Optional["GroupExecution"], int, Optional[str]]:
         """Execute one group with rollback, bounded retries, and the
         degradation ladder.  Returns ``(execution, failed_attempts,
@@ -833,7 +871,13 @@ class ServingSession:
                     self.backoff_seconds += pause
                     self._sleep(pause)
             try:
-                return self._attempt_group(group, group_id), failures, None
+                return (
+                    self._attempt_group(
+                        group, group_id,
+                        adaptive_threshold=adaptive_threshold,
+                    ),
+                    failures, None,
+                )
             except Exception as err:
                 failures += 1
                 last_err = err
@@ -846,7 +890,10 @@ class ServingSession:
                 # hooks at the same depth boundaries as the segmented one.)
                 self.engine.executor.fused = False
                 try:
-                    execution = self._attempt_group(group, group_id)
+                    execution = self._attempt_group(
+                        group, group_id,
+                        adaptive_threshold=adaptive_threshold,
+                    )
                     self.degraded_runs += 1
                     return execution, failures, "unfused"
                 except Exception as err:
@@ -859,7 +906,9 @@ class ServingSession:
                 # fallback executor (sharded plans cannot unfuse).
                 snapshot = self.engine.executor.residency_state()
                 try:
-                    execution = self.engine.execute_group_fallback(group)
+                    execution = self.engine.execute_group_fallback(
+                        group, adaptive_threshold=adaptive_threshold
+                    )
                     self.degraded_runs += 1
                     return execution, failures, "single_device"
                 except Exception as err:
@@ -871,7 +920,10 @@ class ServingSession:
         return None, failures, None
 
     def _attempt_group(
-        self, group, group_id: Optional[int] = None
+        self,
+        group,
+        group_id: Optional[int] = None,
+        adaptive_threshold: Optional[float] = None,
     ) -> "GroupExecution":
         """One execution attempt with crash-consistent rollback.
 
@@ -893,7 +945,10 @@ class ServingSession:
             )
         snapshot = self.engine.executor.residency_state()
         try:
-            return self.engine._execute_group(group, intermittent=intermittent)
+            return self.engine._execute_group(
+                group, intermittent=intermittent,
+                adaptive_threshold=adaptive_threshold,
+            )
         except BaseException:
             self.engine.executor.set_residency(snapshot)
             raise
@@ -1148,6 +1203,10 @@ class ServingSession:
         self.groups_executed += 1
         self.stats = self.stats.merge(execution.stats)
         self.predicted = self.predicted.merge(execution.predicted)
+        self.expected = self.expected.merge(
+            execution.expected if execution.expected is not None
+            else execution.predicted
+        )
         if self.energy is not None:
             spent = execution.stats.energy(self.engine.hw)
             self.energy.drain(min(spent, self.energy.available))

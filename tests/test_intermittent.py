@@ -358,6 +358,13 @@ def test_recover_resumes_interrupted_group_exactly_once():
     assert len(gids) == len(set(gids))
     covered = [s for r in commits for s in r["seqs"]]
     assert len(covered) == len(set(covered))
+    # The open group_begin was closed *in place* by the resumed run.  If
+    # anything in the resume path raises (e.g. a post-run prediction
+    # rejecting the checkpoint-resumed trace), _resume_inflight silently
+    # falls back to replanning the members under a fresh gid — still
+    # exactly-once, but the mid-suffix checkpoint credit is thrown away
+    # and the group re-executes from scratch.
+    assert mid.inflight["group_id"] in gids
 
 
 def test_recover_without_checkpoints_reruns_from_scratch():

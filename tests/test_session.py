@@ -6,8 +6,9 @@ re-solving change *what gets batched together, in what order, and what gets
 loaded* — never *what gets computed*.  Sessioned ``submit()`` + ``drain()``
 outputs are allclose to sequential ``serve()`` for random gate outcomes,
 task subsets, and admission orders, and the session's cumulative executed
-counters equal its incremental cost-model prediction exactly whenever no
-gate fires differently than predicted (i.e. for ungated engines).
+counters equal its incremental cost-model prediction exactly — gated
+engines included, since the prediction replays each group's realized gate
+trace (``session.expected`` keeps the a-priori all-gates-fire view).
 
 Property tests run under hypothesis when installed and always under a
 fixed-seed randomized fallback.
@@ -478,10 +479,12 @@ def test_resolve_order_disabled_with_gates():
     assert all(g.order is None for g in groups)  # gate order preserved
 
 
-def test_resolve_order_disabled_with_conditional_constraints():
+def test_resolve_order_with_conditional_constraints_uses_expected_costs():
     # The global order was solved under conditional execution probabilities
-    # (Eq. 8); solve_suborder optimizes the unweighted objective, so
-    # re-solving must not run for probability-weighted engines.
+    # (Eq. 8).  solve_suborder rebuilds precedence-only constraints (the
+    # probabilities would be dropped), so the engine re-solves over the
+    # *expected* cost matrix instead — the probabilities folded into a
+    # GateModel — and per-plan re-solving now runs for these engines.
     cons = Constraints.make(4, conditional=[(0, 1, 0.5)])
     eng = MultitaskEngine(
         PROGRAM, hw=MSP430, constraints=cons,
@@ -489,7 +492,40 @@ def test_resolve_order_disabled_with_conditional_constraints():
     )
     rng = np.random.default_rng(16)
     groups = eng.plan_groups(_requests(rng, [None, (0, 1)]))
-    assert all(g.order is None for g in groups)
+    # Multi-task groups get re-solved per-plan orders now.
+    assert any(g.order is not None for g in groups)
+    # Every re-solved order still satisfies the (precedence-folded) edges.
+    for g in groups:
+        if g.order is not None:
+            pos = {t: k for k, t in enumerate(g.order)}
+            assert all(
+                pos[i] < pos[j] for (i, j) in cons.precedence
+                if i in pos and j in pos
+            )
+    # The matrix the re-solve priced: expected switching costs, i.e. edges
+    # into task 1 weighted by its 0.5 execution probability.
+    mat = eng._resolve_matrix()
+    exact = eng.cost_model.cost_matrix()
+    for i in range(4):
+        if i == 1:
+            continue
+        assert mat[i, 1] == pytest.approx(0.5 * exact[i, 1])
+        assert mat[1, i] == pytest.approx(exact[1, i])
+    # Serving through the re-solving engine stays output-identical to a
+    # non-resolving one and keeps the counter-exactness invariant.
+    reqs = _requests(rng, [None, (0, 1), (1, 2, 3)])
+    base = MultitaskEngine(PROGRAM, hw=MSP430, constraints=cons)
+    s1 = eng.session()
+    f1 = [s1.submit(r) for r in reqs]
+    s1.drain()
+    assert s1.stats == s1.predicted
+    for fa, rb in zip(f1, base.serve_batch(reqs)):
+        ra = fa.result()
+        assert set(ra.outputs) == set(rb.outputs)
+        for t in ra.outputs:
+            np.testing.assert_allclose(
+                np.asarray(ra.outputs[t]), np.asarray(rb.outputs[t]),
+                rtol=1e-5, atol=1e-6)
 
 
 # --------------------------------------------------------------------------
@@ -588,9 +624,13 @@ def check_session_matches_sequential(spec, data_seed, policy_idx,
 
     assert all(f.done() for f in futures)
     assert session.requests_admitted == len(reqs)
-    if not gated:
-        # Cumulative executed counters == incremental prediction, exactly.
-        assert session.stats == session.predicted
+    # Cumulative executed counters == incremental prediction, exactly —
+    # gated runs included: the prediction replays each group's realized
+    # gate trace (legacy gate= skips carry weight-0 records).
+    assert session.stats == session.predicted
+    # A non-adaptive engine's a-priori expectation is the prediction's
+    # all-gates-fire floor: equal when nothing gated, an upper bound else.
+    assert session.expected.flops_executed >= session.stats.flops_executed
     for f, req in zip(futures, reqs):
         rs = f.result()
         ss = solo.serve(req)
